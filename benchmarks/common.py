@@ -1,0 +1,161 @@
+"""Shared benchmark machinery.
+
+Every engine (the five baselines + SplitFS in three modes) runs the same
+workload against a real PM buffer; results report BOTH:
+  * modeled ns/op from the calibrated mechanism meter (the paper's metric:
+    same price table for every engine, so ratios are predictions), and
+  * measured host wall time (sanity only — host Python costs are not PM
+    costs).
+
+``software_ns`` = modeled total - raw device transfer time, exactly the
+paper's definition of software overhead (§5.7).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import BLOCK_SIZE, Mode, PMDevice, USplit, Volume, VolumeGeometry
+from repro.core.baselines import (DaxEngine, NovaRelaxedEngine,
+                                  NovaStrictEngine, PmfsEngine, StrataEngine)
+
+BENCH_GEOMETRY = VolumeGeometry(meta_blocks=8192, journal_blocks=4096,
+                                oplog_slots=2, oplog_blocks=2048)
+DEVICE_BYTES = 1024 * 1024 * 1024
+
+
+def rnd_block(seed: int, n: int = BLOCK_SIZE) -> bytes:
+    return np.random.default_rng(seed).integers(0, 256, n,
+                                                dtype=np.uint8).tobytes()
+
+
+# ---------------------------------------------------------------- adapters
+# One uniform interface: open/create -> handle; append/write/read/fsync.
+
+
+class SplitFSAdapter:
+    def __init__(self, mode: Mode, **kw):
+        self.device = PMDevice(size=DEVICE_BYTES)
+        self.volume = Volume.format(self.device, BENCH_GEOMETRY)
+        kw.setdefault("staging_file_bytes", 32 * 1024 * 1024)
+        kw.setdefault("staging_prealloc", 4)
+        kw.setdefault("staging_background", False)
+        if mode is Mode.STRICT:
+            kw.setdefault("oplog_slot", 0)
+        self.store = USplit(self.volume, mode=mode, **kw)
+        self.name = f"SplitFS-{mode.name.lower()}"
+        self.meter = self.device.meter
+
+    def create(self, name):
+        return self.store.open(name, create=True)
+
+    def open(self, name):
+        return self.store.open(name)
+
+    def close(self, fd):
+        self.store.close(fd)
+
+    def append(self, fd, data):
+        self.store.lseek(fd, 0, 2)
+        self.store.write(fd, data)
+
+    def write(self, fd, off, data):
+        self.store.pwrite(fd, data, off)
+
+    def read(self, fd, off, n):
+        return self.store.pread(fd, n, off)
+
+    def fsync(self, fd):
+        self.store.fsync(fd)
+
+    def unlink(self, name):
+        self.store.unlink(name)
+
+
+class EngineAdapter:
+    def __init__(self, Engine):
+        self.engine = Engine(device_bytes=DEVICE_BYTES)
+        self.name = Engine.name
+        self.meter = self.engine.meter
+
+    def create(self, name):
+        return self.engine.create(name)
+
+    def open(self, name):
+        return self.engine.open(name)
+
+    def close(self, h):
+        self.engine.close(h)
+
+    def append(self, h, data):
+        self.engine.append(h, data)
+
+    def write(self, h, off, data):
+        self.engine.write(h, off, data)
+
+    def read(self, h, off, n):
+        return self.engine.read(h, off, n)
+
+    def fsync(self, h):
+        self.engine.fsync(h)
+
+    def unlink(self, name):
+        self.engine.unlink(name)
+
+
+def make_fs(kind: str):
+    if kind.startswith("splitfs"):
+        mode = {"splitfs-posix": Mode.POSIX, "splitfs-sync": Mode.SYNC,
+                "splitfs-strict": Mode.STRICT}[kind]
+        return SplitFSAdapter(mode)
+    eng = {"ext4-dax": DaxEngine, "pmfs": PmfsEngine,
+           "nova-relaxed": NovaRelaxedEngine, "nova-strict": NovaStrictEngine,
+           "strata": StrataEngine}[kind]
+    return EngineAdapter(eng)
+
+
+ALL_KINDS = ["ext4-dax", "pmfs", "nova-relaxed", "nova-strict", "strata",
+             "splitfs-posix", "splitfs-sync", "splitfs-strict"]
+
+
+@dataclass
+class Result:
+    name: str
+    n_ops: int
+    modeled_ns_per_op: float
+    software_ns_per_op: float
+    device_ns_per_op: float
+    wall_us_per_op: float
+    pm_bytes_written: float
+    extra: Optional[Dict] = None
+
+    def csv(self, bench: str) -> str:
+        return (f"{bench},{self.name},{self.n_ops},"
+                f"{self.modeled_ns_per_op:.1f},{self.software_ns_per_op:.1f},"
+                f"{self.device_ns_per_op:.1f},{self.wall_us_per_op:.2f},"
+                f"{self.pm_bytes_written:.0f}")
+
+
+CSV_HEADER = ("bench,system,n_ops,modeled_ns_op,software_ns_op,"
+              "device_ns_op,wall_us_op,pm_bytes_written")
+
+
+def run_workload(fs, workload: Callable, n_ops: int) -> Result:
+    fs.meter.reset()
+    t0 = time.monotonic()
+    extra = workload(fs)
+    wall = time.monotonic() - t0
+    snap = fs.meter
+    return Result(
+        name=fs.name, n_ops=n_ops,
+        modeled_ns_per_op=snap.ns() / n_ops,
+        software_ns_per_op=snap.software_ns() / n_ops,
+        device_ns_per_op=snap.device_ns() / n_ops,
+        wall_us_per_op=wall * 1e6 / n_ops,
+        pm_bytes_written=snap.pm_bytes_written(),
+        extra=extra if isinstance(extra, dict) else None,
+    )

@@ -1,0 +1,82 @@
+"""Roofline report: digest runs/dryrun/*.json into the EXPERIMENTS.md table
+and pick hillclimb candidates (worst useful-ratio, most collective-bound,
+most technique-representative)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+
+def load_records(out_dir: str = "runs/dryrun",
+                 mesh: str = "16x16",
+                 variant: Optional[str] = None) -> List[Dict]:
+    rows = []
+    for p in sorted(Path(out_dir).glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("mesh") != mesh:
+            continue
+        parts = p.stem.split("__")
+        tagged_variant = "__".join(parts[3:]) if len(parts) > 3 else ""
+        if (variant or "") != tagged_variant:
+            continue
+        rows.append(r)
+    return rows
+
+
+def table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | status | peak GiB | compute s | memory s | "
+           "collective s | bottleneck | useful | compile s |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | FAIL | - | - | - |"
+                         f" - | - | - | - |")
+            continue
+        rf = r.get("roofline", {})
+        mem = r["memory"]["peak_bytes_est"] / 2**30
+        lines.append(
+            "| {arch} | {shape} | ok | {mem:.1f} | {c:.4f} | {m:.4f} | "
+            "{x:.4f} | {b} | {u} | {t:.0f} |".format(
+                arch=r["arch"], shape=r["shape"], mem=mem,
+                c=rf.get("compute_s", 0), m=rf.get("memory_s", 0),
+                x=rf.get("collective_s", 0), b=rf.get("bottleneck", "-"),
+                u=f"{rf['useful_ratio']:.3f}" if rf.get("useful_ratio") else "-",
+                t=r.get("compile_s", 0)))
+    return "\n".join(lines)
+
+
+def pick_hillclimb_cells(rows: List[Dict]) -> Dict[str, Dict]:
+    ok = [r for r in rows if r.get("status") == "ok" and "roofline" in r]
+    with_useful = [r for r in ok if r["roofline"].get("useful_ratio")]
+    worst_useful = min(with_useful, key=lambda r: r["roofline"]["useful_ratio"],
+                       default=None)
+    most_collective = max(
+        ok, key=lambda r: r["roofline"]["collective_s"]
+        / max(sum((r["roofline"]["compute_s"], r["roofline"]["memory_s"],
+                   r["roofline"]["collective_s"])), 1e-12),
+        default=None)
+    # technique-representative: a paged-KV decode cell (the paper's plane)
+    decodes = [r for r in ok if r["kind"] == "decode"]
+    representative = max(decodes, key=lambda r: r["memory"]["peak_bytes_est"],
+                         default=None)
+    return {"worst_useful": worst_useful,
+            "most_collective_bound": most_collective,
+            "technique_representative": representative}
+
+
+def main() -> None:
+    rows = load_records()
+    print(table(rows))
+    picks = pick_hillclimb_cells(rows)
+    print("\nHillclimb candidates:")
+    for why, r in picks.items():
+        if r:
+            print(f"  {why}: {r['arch']} x {r['shape']} "
+                  f"(bottleneck={r['roofline']['bottleneck']})")
+
+
+if __name__ == "__main__":
+    main()

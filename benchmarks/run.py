@@ -1,0 +1,94 @@
+"""Benchmark entry point: one artifact per paper table/figure + recovery +
+YCSB + (if dry-run artifacts exist) the roofline digest.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .common import CSV_HEADER
+from .paper_tables import (fig3_breakdown, fig4_io_patterns, recovery_time,
+                           table1_append, table6_syscalls,
+                           table7_strata_write_io)
+from .ycsb import fig5_software_overhead, run_ycsb
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller op counts (CI)")
+    args = ap.parse_args()
+    n = 512 if args.fast else 4096
+    kv_ops = 256 if args.fast else 1024
+
+    print("== Table 1: 4KB append software overhead ==")
+    print(CSV_HEADER + ",paper_total_ns,paper_sw_ns")
+    for r in table1_append(n_ops=n):
+        e = r.extra or {}
+        print(r.csv("table1") + f",{e.get('paper_total_ns')},"
+              f"{e.get('paper_sw_ns')}")
+
+    print("\n== Table 6: per-syscall latency (modeled us) ==")
+    t6 = table6_syscalls()
+    ops = ["open", "close", "append", "fsync", "read", "unlink"]
+    print("system," + ",".join(ops))
+    for name, lat in t6.items():
+        print(name + "," + ",".join(f"{lat.get(o, 0):.2f}" for o in ops))
+
+    print("\n== Fig 3: technique breakdown (modeled ns/op) ==")
+    f3 = fig3_breakdown(n_ops=max(n // 2, 256))
+    print("workload,split-only,+staging,+relink,relink_speedup")
+    for wl, row in f3.items():
+        print(f"{wl},{row['split-only']:.0f},{row['+staging']:.0f},"
+              f"{row['+relink']:.0f},"
+              f"{row['split-only'] / row['+relink']:.2f}x")
+
+    print("\n== Fig 4: IO patterns (modeled Mops/s) ==")
+    f4 = fig4_io_patterns(file_mb=4 if args.fast else 16)
+    pats = ["seq_read", "rand_read", "seq_write", "rand_write", "append"]
+    print("system," + ",".join(pats))
+    for name, row in f4.items():
+        print(name + "," + ",".join(f"{row[p]:.3f}" for p in pats))
+
+    print("\n== Table 7: PM bytes written per logical byte (vs Strata) ==")
+    t7 = table7_strata_write_io(n_ops=n)
+    for name, amp in t7.items():
+        print(f"{name},{amp:.3f}")
+
+    print("\n== §5.3 recovery ==")
+    rec = recovery_time(n_entries=2000 if args.fast else 20000)
+    print(f"entries={rec['entries']} wall_s={rec['wall_s']:.3f} "
+          f"modeled_pm_s={rec['modeled_pm_s']:.4f} "
+          f"recovered_bytes={rec['recovered_bytes']}")
+
+    print("\n== Fig 5: relative software overhead (same-guarantee groups) ==")
+    f5 = fig5_software_overhead(n_records=kv_ops // 2, n_ops=kv_ops)
+    for group, systems in f5.items():
+        for name, rel in systems.items():
+            print(f"{group},{name},loadA={rel['loadA_rel']:.2f}x,"
+                  f"runA={rel['runA_rel']:.2f}x")
+
+    print("\n== YCSB A-F on SplitFS-strict vs NOVA-strict (modeled kops/s) ==")
+    for kind in ("splitfs-strict", "nova-strict"):
+        res = run_ycsb(kind, n_records=kv_ops // 2, n_ops=kv_ops)
+        row = ",".join(f"{w}={res[w]['modeled_kops']:.0f}"
+                       for w in ("A", "B", "C", "D", "E", "F"))
+        print(f"{kind},{row}")
+
+    if Path("runs/dryrun").exists():
+        print("\n== Roofline digest (single-pod dry-run artifacts) ==")
+        from .roofline import load_records, pick_hillclimb_cells, table
+        rows = load_records()
+        if rows:
+            print(table(rows))
+            for why, r in pick_hillclimb_cells(rows).items():
+                if r:
+                    print(f"hillclimb[{why}]: {r['arch']} x {r['shape']}")
+
+
+if __name__ == "__main__":
+    main()

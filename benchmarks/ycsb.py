@@ -1,0 +1,128 @@
+"""YCSB A-F over a WAL+index KV store (the paper's §5.8 application class)
+and Fig 5 software-overhead accounting.
+
+The KV store is LevelDB-shaped where it matters to the file system: every
+update appends a record to a write-ahead log (fsync'd in batches), reads
+hit the log through the index.  The SAME store code runs over every engine
+adapter, so differences are pure file-system software overhead.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict, List
+
+import numpy as np
+
+from .common import ALL_KINDS, make_fs
+
+VALUE_SIZE = 1024
+
+
+class WalKV:
+    """Append-only WAL + in-memory index (offset, len)."""
+
+    def __init__(self, fs, fsync_every: int = 8) -> None:
+        self.fs = fs
+        self.h = fs.create("wal")
+        self.index: Dict[int, tuple] = {}
+        self.tail = 0
+        self.fsync_every = fsync_every
+        self._pending = 0
+
+    def set(self, key: int, value: bytes) -> None:
+        rec = struct.pack("<QI", key, len(value)) + value
+        self.fs.append(self.h, rec)
+        self.index[key] = (self.tail + 12, len(value))
+        self.tail += len(rec)
+        self._pending += 1
+        if self._pending >= self.fsync_every:
+            self.fs.fsync(self.h)
+            self._pending = 0
+
+    def get(self, key: int) -> bytes:
+        off, n = self.index[key]
+        return self.fs.read(self.h, off, n)
+
+    def scan(self, key: int, n_keys: int) -> List[bytes]:
+        keys = sorted(k for k in self.index if k >= key)[:n_keys]
+        return [self.get(k) for k in keys]
+
+
+WORKLOADS = {   # (read%, update%, insert%, scan%, rmw%)
+    "load": (0, 0, 100, 0, 0),
+    "A": (50, 50, 0, 0, 0),
+    "B": (95, 5, 0, 0, 0),
+    "C": (100, 0, 0, 0, 0),
+    "D": (95, 0, 5, 0, 0),
+    "E": (0, 0, 5, 95, 0),
+    "F": (50, 0, 0, 0, 50),
+}
+
+
+def run_ycsb(kind: str, n_records: int = 512, n_ops: int = 1024,
+             seed: int = 0) -> Dict[str, Dict[str, float]]:
+    """Returns per-workload {modeled_kops, software_frac}."""
+    rng = np.random.default_rng(seed)
+    value = bytes(rng.integers(0, 256, VALUE_SIZE, dtype=np.uint8))
+    out: Dict[str, Dict[str, float]] = {}
+    fs = make_fs(kind)
+    kv = WalKV(fs)
+    next_key = [0]
+
+    def zipf_key() -> int:
+        return int(rng.zipf(1.3)) % max(next_key[0], 1)
+
+    for wname, (r, u, ins, sc, rmw) in WORKLOADS.items():
+        ops = n_records if wname == "load" else n_ops
+        fs.meter.reset()
+        for _ in range(ops):
+            dice = rng.integers(0, 100)
+            if wname == "load" or dice < ins:
+                kv.set(next_key[0], value)
+                next_key[0] += 1
+            elif dice < ins + r:
+                kv.get(zipf_key())
+            elif dice < ins + r + u:
+                kv.set(zipf_key(), value)
+            elif dice < ins + r + u + sc:
+                kv.scan(zipf_key(), 8)
+            else:  # read-modify-write
+                k = zipf_key()
+                v = kv.get(k)
+                kv.set(k, v)
+        total = fs.meter.ns()
+        out[wname] = {
+            "modeled_kops": ops / max(total, 1) * 1e6,
+            "software_frac": fs.meter.software_ns() / max(total, 1),
+        }
+    return out
+
+
+def fig5_software_overhead(n_records: int = 512,
+                           n_ops: int = 1024) -> Dict[str, Dict[str, float]]:
+    """Fig 5: software overhead of each same-guarantee system relative to
+    SplitFS on write-heavy workloads (YCSB Load A / Run A)."""
+    groups = {
+        "posix": ("ext4-dax", "splitfs-posix"),
+        "sync": ("pmfs", "nova-relaxed", "splitfs-sync"),
+        "strict": ("nova-strict", "splitfs-strict"),
+    }
+    out: Dict[str, Dict[str, float]] = {}
+    for gname, kinds in groups.items():
+        sw: Dict[str, Dict] = {}
+        for kind in kinds:
+            res = run_ycsb(kind, n_records, n_ops)
+            sw[kind] = {
+                "loadA_sw_ns": 1e6 / res["load"]["modeled_kops"]
+                * res["load"]["software_frac"],
+                "runA_sw_ns": 1e6 / res["A"]["modeled_kops"]
+                * res["A"]["software_frac"],
+            }
+        base = [k for k in kinds if k.startswith("splitfs")][0]
+        for kind in kinds:
+            out.setdefault(gname, {})[kind] = {
+                "loadA_rel": sw[kind]["loadA_sw_ns"] / sw[base]["loadA_sw_ns"],
+                "runA_rel": sw[kind]["runA_sw_ns"] / sw[base]["runA_sw_ns"],
+            }
+    return out

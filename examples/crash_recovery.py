@@ -1,0 +1,49 @@
+"""Crash-recovery demo (paper §5.3): strict-mode writes, power loss,
+idempotent oplog replay.
+
+    PYTHONPATH=src python examples/crash_recovery.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import BLOCK_SIZE, Mode, PMDevice, USplit, Volume
+
+device = PMDevice(size=256 * 1024 * 1024)
+volume = Volume.format(device)
+fs = USplit(volume, mode=Mode.STRICT, oplog_slot=0,
+            staging_file_bytes=32 * 1024 * 1024, staging_prealloc=2,
+            staging_background=False)
+
+fd = fs.open("db.wal", create=True)
+committed = b""
+pending = b""
+rng = np.random.default_rng(0)
+for i in range(500):
+    rec = rng.integers(0, 256, 512, dtype=np.uint8).tobytes()
+    fs.write(fd, rec)
+    pending += rec
+    if i == 349:                       # last fsync at record 350
+        fs.fsync(fd)
+        committed, pending = committed + pending, b""
+print(f"before crash: committed={len(committed)}B  "
+      f"pending-in-staging={len(pending)}B  log_entries={fs.stats.log_entries}")
+
+# ---- power loss: clone the device buffer as-is, tear 64 random bytes ----
+crashed = device.torn_copy(np.random.default_rng(1), torn_tail_bytes=64)
+print("crash! remounting...")
+
+t0 = time.monotonic()
+vol2 = Volume.mount(crashed)           # K-Split: checkpoint + journal replay
+fs2 = USplit(vol2, mode=Mode.STRICT, oplog_slot=0, recover=True,
+             staging_file_bytes=32 * 1024 * 1024, staging_prealloc=1,
+             staging_background=False)  # U-Split: idempotent oplog replay
+dt = time.monotonic() - t0
+
+got = fs2.read_file("db.wal")
+print(f"recovered in {dt * 1000:.0f} ms: {len(got)} bytes")
+assert got == committed + pending, "strict mode replays even unsynced appends"
+print("all 500 records recovered, including the 150 never fsync'd  ✓")
+print("(replay is idempotent: crashing during recovery and replaying again "
+      "is safe — tests/test_crash_recovery.py::test_recovery_is_idempotent)")

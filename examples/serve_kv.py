@@ -1,0 +1,60 @@
+"""End-to-end driver: serve a small model with batched requests through the
+paged-KV split store (the paper's kind is storage/serving, so this is the
+required end-to-end example).
+
+    PYTHONPATH=src python examples/serve_kv.py [--arch qwen2-1.5b]
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+from repro.models.spec import init_params
+from repro.serve import ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2-1.5b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    api = build_model(cfg)
+    params = init_params(api.init_specs(), jax.random.PRNGKey(0))
+    engine = ServingEngine(api, params, max_batch=args.max_batch,
+                           max_seq=128, page_tokens=16)
+
+    rng = np.random.default_rng(0)
+    t0 = time.monotonic()
+    for i in range(args.requests):
+        prompt = list(rng.integers(1, cfg.vocab, int(rng.integers(4, 24))))
+        engine.submit(prompt, max_new_tokens=12)
+    done = engine.run_until_done()
+    dt = time.monotonic() - t0
+
+    toks = sum(len(r.output) for r in done)
+    print(f"arch={cfg.name}  requests={len(done)}  generated={toks} tokens  "
+          f"wall={dt:.1f}s  engine_steps={engine.steps}")
+    print(f"paged store: relinked={engine.controller.pages_relinked} pages, "
+          f"CoW-copied={engine.controller.pages_copied}, "
+          f"pool-util-peak~{engine.controller.utilization():.1%}")
+
+    # zero-copy beam fork demo
+    r = engine.submit(list(rng.integers(1, cfg.vocab, 16)), max_new_tokens=10)
+    for _ in range(18):
+        engine.step()
+    child = engine.fork(r)
+    engine.run_until_done()
+    print(f"forked request {r.rid}->{child.rid}: parent={r.output} "
+          f"child={child.output} (shared prefix pages, "
+          f"{engine.controller.pages_copied} CoW copies total)")
+
+
+if __name__ == "__main__":
+    main()

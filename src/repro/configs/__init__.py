@@ -1,0 +1,42 @@
+"""Assigned architecture registry: --arch <id> resolves here."""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from ..models.config import ModelConfig
+from . import (deepseek_v2_lite_16b, grok_1_314b, internvl2_1b, mamba2_1_3b,
+               minitron_8b, qwen2_1_5b, qwen2_72b, recurrentgemma_9b,
+               starcoder2_7b, whisper_large_v3)
+from .shapes import (ALL_SHAPES, DECODE_32K, LONG_500K, PREFILL_32K,
+                     TRAIN_4K, ShapeCfg, shapes_for)
+
+_MODULES = {
+    "recurrentgemma-9b": recurrentgemma_9b,
+    "whisper-large-v3": whisper_large_v3,
+    "minitron-8b": minitron_8b,
+    "starcoder2-7b": starcoder2_7b,
+    "qwen2-72b": qwen2_72b,
+    "qwen2-1.5b": qwen2_1_5b,
+    "grok-1-314b": grok_1_314b,
+    "deepseek-v2-lite-16b": deepseek_v2_lite_16b,
+    "mamba2-1.3b": mamba2_1_3b,
+    "internvl2-1b": internvl2_1b,
+}
+
+ARCH_IDS = list(_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = _MODULES[arch]
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def all_cells() -> Dict[Tuple[str, str], Tuple[ModelConfig, ShapeCfg]]:
+    """Every runnable (arch x shape) cell."""
+    out = {}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            out[(arch, shape.name)] = (cfg, shape)
+    return out

@@ -1,0 +1,25 @@
+"""repro.core — the paper's contribution: the SplitFS split-architecture
+storage plane (U-Split/K-Split, staging + relink, optimized oplog, three
+consistency modes) plus the baseline engines it is evaluated against and
+the paged-KV serving plane built on the same primitives."""
+
+from .extents import ExtentMap, Segment, move_extents
+from .journal import Journal, Txn
+from .ksplit import FSError, Inode, KSplit, NoEntError
+from .mmap_cache import MmapCache
+from .modes import Mode
+from .oplog import LogEntry, OpLog
+from .pagepool import OutOfSpaceError, PagePool
+from .pmem import BLOCK_SIZE, CACHELINE, MMAP_CHUNK, Meter, NS, PMDevice
+from .staging import StagedRange, StagingAllocator
+from .store import FileState, StagedExtent, StoreStats, USplit
+from .volume import Volume, VolumeGeometry
+
+__all__ = [
+    "BLOCK_SIZE", "CACHELINE", "MMAP_CHUNK", "ExtentMap", "FSError",
+    "FileState", "Inode", "Journal", "KSplit", "LogEntry", "Meter",
+    "MmapCache", "Mode", "NS", "NoEntError", "OpLog", "OutOfSpaceError",
+    "PMDevice", "PagePool", "Segment", "StagedExtent", "StagedRange",
+    "StagingAllocator", "StoreStats", "Txn", "USplit", "Volume",
+    "VolumeGeometry", "move_extents",
+]

@@ -1,0 +1,414 @@
+"""Baseline PM file-system engines the paper evaluates against (§2.3, §5).
+
+Every engine executes its real mechanism against a real PMDevice buffer —
+data genuinely lands on the device, reads genuinely come back — and emits
+the cost events of its design.  The same calibrated price table (pmem.NS)
+converts counts to ns for all engines, so Table 1/6/Fig 3-5 comparisons are
+mechanism predictions, not per-engine tuning.
+
+  DaxEngine          ext4 DAX: every op traps; appends allocate + journal
+                     (jbd2) + stream data; no atomicity for data.
+  PmfsEngine         in-kernel PM FS; cheaper allocator + fine-grained
+                     metadata undo-logging; synchronous, no data atomicity.
+  NovaRelaxedEngine  per-inode PM log; >=2 log cachelines + 2 fences per op;
+                     in-place data updates.
+  NovaStrictEngine   + copy-on-write data pages per overwrite (atomic data).
+  StrataEngine       user-space LibFS: appends go to a private log with no
+                     trap, a digest later *copies* them to the shared area
+                     (the 2x write-IO behaviour Table 7 measures).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .extents import ExtentMap
+from .journal import Journal
+from .ksplit import KSplit, NoEntError
+from .pagepool import PagePool
+from .pmem import BLOCK_SIZE, CACHELINE, PMDevice
+
+
+# ---------------------------------------------------------------------------
+# Shared minimal file table for the non-ext4 engines
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _BFile:
+    name: str
+    size: int = 0
+    extents: ExtentMap = field(default_factory=ExtentMap)
+
+
+class BaselineFS:
+    """Common machinery: namespace, block allocation, raw block IO."""
+
+    name = "baseline"
+
+    def __init__(self, device: Optional[PMDevice] = None,
+                 device_bytes: int = 512 * 1024 * 1024) -> None:
+        self.device = device or PMDevice(size=device_bytes)
+        self.pool = PagePool(self.device, base_block=1)
+        self.files: Dict[str, _BFile] = {}
+        self.meter = self.device.meter
+
+    # -- namespace ---------------------------------------------------------------
+
+    def create(self, name: str) -> _BFile:
+        self.device.meter.add("trap", 1)
+        self.device.meter.add("open_path", 1)
+        f = _BFile(name)
+        self.files[name] = f
+        self._log_meta_op()
+        return f
+
+    def open(self, name: str) -> _BFile:
+        self.device.meter.add("trap", 1)
+        self.device.meter.add("open_path", 1)
+        if name not in self.files:
+            raise NoEntError(name)
+        return self.files[name]
+
+    def close(self, f: _BFile) -> None:
+        self.device.meter.add("trap", 1)
+
+    def unlink(self, name: str) -> None:
+        self.device.meter.add("trap", 1)
+        self.device.meter.add("open_path", 1)
+        f = self.files.pop(name)
+        blocks = f.extents.all_blocks()
+        if blocks:
+            self.pool.free(blocks)
+        self._log_meta_op()
+
+    # -- raw block IO -----------------------------------------------------------------
+
+    def _ensure_blocks(self, f: _BFile, offset: int, n: int, alloc_event: str) -> int:
+        first = offset // BLOCK_SIZE
+        last = (offset + n - 1) // BLOCK_SIZE
+        missing = [l for l in range(first, last + 1) if f.extents.lookup_block(l) is None]
+        if missing:
+            for l, p in zip(missing, self.pool.alloc(len(missing), cost_event=alloc_event)):
+                f.extents.set_block(l, p)
+        return len(missing)
+
+    def _write_blocks(self, f: _BFile, offset: int, data: bytes) -> None:
+        pos = 0
+        for seg in f.extents.segments(offset, len(data)):
+            self.device.write_data(seg.phys_addr, data[pos : pos + seg.length])
+            pos += seg.length
+
+    def _read_blocks(self, f: _BFile, offset: int, n: int) -> bytes:
+        n = max(0, min(n, f.size - offset))
+        if n == 0:
+            return b""
+        out = bytearray(n)
+        pos = 0
+        for seg in f.extents.segments(offset, n):
+            out[pos : pos + seg.length] = self.device.read(seg.phys_addr, seg.length)
+            pos += seg.length
+        return bytes(out)
+
+    # hooks ------------------------------------------------------------------------
+
+    def _log_meta_op(self) -> None:  # engine-specific metadata durability
+        pass
+
+
+# ---------------------------------------------------------------------------
+
+
+class DaxEngine:
+    """ext4 DAX — metadata-consistent, journaled, trap per operation.
+    Built directly on KSplit (K-Split *is* ext4 DAX in this system), so the
+    costs are the identical journal/allocator code paths U-Split routes to."""
+
+    name = "ext4-DAX"
+
+    def __init__(self, device: Optional[PMDevice] = None,
+                 device_bytes: int = 512 * 1024 * 1024) -> None:
+        from .volume import Volume, VolumeGeometry
+
+        self.device = device or PMDevice(size=device_bytes)
+        self.volume = Volume.format(
+            self.device,
+            VolumeGeometry(meta_blocks=256, journal_blocks=4096, oplog_slots=0),
+        )
+        self.ksplit: KSplit = self.volume.ksplit
+        self.meter = self.device.meter
+
+    def create(self, name: str):
+        return self.ksplit.create(name)
+
+    def open(self, name: str):
+        return self.ksplit.lookup(name)
+
+    def close(self, ino) -> None:
+        self.device.meter.add("trap", 1)
+
+    def unlink(self, name: str) -> None:
+        self.ksplit.unlink(name)
+
+    def append(self, ino, data: bytes) -> None:
+        size = self.ksplit.inodes[ino].size
+        self.write(ino, size, data)
+
+    def write(self, ino, offset: int, data: bytes) -> None:
+        self.ksplit.write(ino, offset, data)
+
+    def read(self, ino, offset: int, n: int) -> bytes:
+        return self.ksplit.read(ino, offset, n)
+
+    def fsync(self, ino) -> None:
+        self.ksplit.fsync(ino)
+
+
+class PmfsEngine(BaselineFS):
+    """PMFS — synchronous in-kernel writes, fine-grained metadata undo log.
+    No data atomicity: an overwrite torn by a crash stays torn."""
+
+    name = "PMFS"
+
+    def append(self, f: _BFile, data: bytes) -> None:
+        self.device.meter.add("trap", 1)
+        self.device.meter.add("pmfs_write_path", 1)
+        self._ensure_blocks(f, f.size, len(data), "pmfs_alloc")
+        self._write_blocks(f, f.size, data)
+        # metadata undo-log: i_size + block map entries (2 lines, 2 fences)
+        self.device.meter.add("pm_store_line", 2)
+        self.device.meter.add("fence", 2)
+        f.size += len(data)
+
+    def write(self, f: _BFile, offset: int, data: bytes) -> None:
+        self.device.meter.add("trap", 1)
+        self.device.meter.add("pmfs_write_path", 1)
+        grew = offset + len(data) > f.size
+        self._ensure_blocks(f, offset, len(data), "pmfs_alloc")
+        self._write_blocks(f, offset, data)
+        if grew:
+            self.device.meter.add("pm_store_line", 2)
+            self.device.meter.add("fence", 2)
+            f.size = offset + len(data)
+        else:
+            self.device.meter.add("fence", 1)  # persist ordering for data
+
+    def read(self, f: _BFile, offset: int, n: int) -> bytes:
+        self.device.meter.add("trap", 1)
+        self.device.meter.add("pmfs_write_path", 0)  # read path ~ cheap
+        self.device.meter.add("ext4_read_path", 0)
+        self.device.meter.add("index_op", 1)
+        return self._read_blocks(f, offset, n)
+
+    def fsync(self, f: _BFile) -> None:
+        # PMFS is synchronous: fsync is (almost) a no-op
+        self.device.meter.add("trap", 1)
+        self.device.fence()
+
+    def _log_meta_op(self) -> None:
+        self.device.meter.add("pm_store_line", 2)
+        self.device.meter.add("fence", 2)
+
+
+class NovaRelaxedEngine(BaselineFS):
+    """NOVA with in-place updates, no checksums (paper's NOVA-Relaxed).
+    Every operation appends a per-inode log entry: >= 2 cachelines and
+    2 fences (entry, then the on-PM log tail) — the exact overhead the
+    paper's single-line+single-fence oplog undercuts (§3.3)."""
+
+    name = "NOVA-Relaxed"
+    cow_data = False
+
+    def _inode_log(self, lines: int = 2) -> None:
+        self.device.meter.add("nova_log_line", lines)
+        self.device.meter.add("fence", 2)  # entry fence + tail-update fence
+        self.device.meter.add("pm_store_line", 1)  # tail pointer cacheline
+
+    def append(self, f: _BFile, data: bytes) -> None:
+        self.device.meter.add("trap", 1)
+        self.device.meter.add("nova_write_path", 1)
+        self._ensure_blocks(f, f.size, len(data), "nova_alloc")
+        self._write_blocks(f, f.size, data)
+        self._inode_log()
+        f.size += len(data)
+
+    def write(self, f: _BFile, offset: int, data: bytes) -> None:
+        self.device.meter.add("trap", 1)
+        self.device.meter.add("nova_write_path", 1)
+        if self.cow_data:
+            self._cow_write(f, offset, data)
+        else:
+            self._ensure_blocks(f, offset, len(data), "nova_alloc")
+            self._write_blocks(f, offset, data)
+            self._inode_log()
+        f.size = max(f.size, offset + len(data))
+
+    def _cow_write(self, f: _BFile, offset: int, data: bytes) -> None:
+        """NOVA-strict: copy-on-write pages. Partially-covered blocks must
+        copy the old content first (write amplification the paper counts)."""
+        first = offset // BLOCK_SIZE
+        last = (offset + len(data) - 1) // BLOCK_SIZE
+        new_blocks = self.pool.alloc(last - first + 1, cost_event="nova_alloc")
+        old: List[Optional[int]] = [f.extents.lookup_block(l) for l in range(first, last + 1)]
+        for i, lblk in enumerate(range(first, last + 1)):
+            blk_lo = lblk * BLOCK_SIZE
+            lo = max(offset, blk_lo)
+            hi = min(offset + len(data), blk_lo + BLOCK_SIZE)
+            buf = bytearray(BLOCK_SIZE)
+            if old[i] is not None and (lo > blk_lo or hi < blk_lo + BLOCK_SIZE):
+                buf[:] = self.device.read(old[i] * BLOCK_SIZE, BLOCK_SIZE)
+            buf[lo - blk_lo : hi - blk_lo] = data[lo - offset : hi - offset]
+            self.device.write_data(new_blocks[i] * BLOCK_SIZE, bytes(buf))
+            f.extents.set_block(lblk, new_blocks[i])
+        stale = [b for b in old if b is not None]
+        if stale:
+            self.pool.free(stale, cost_event="nova_alloc")
+        self._inode_log()
+
+    def read(self, f: _BFile, offset: int, n: int) -> bytes:
+        self.device.meter.add("trap", 1)
+        self.device.meter.add("index_op", 1)
+        return self._read_blocks(f, offset, n)
+
+    def fsync(self, f: _BFile) -> None:
+        self.device.meter.add("trap", 1)
+        self.device.fence()
+
+    def _log_meta_op(self) -> None:
+        self._inode_log()
+
+
+class NovaStrictEngine(NovaRelaxedEngine):
+    """NOVA-strict: copy-on-write data updates => atomic data operations."""
+
+    name = "NOVA-Strict"
+    cow_data = True
+
+
+class StrataEngine(BaselineFS):
+    """Strata's LibFS/KernFS split: appends hit a process-private PM log
+    without a kernel trap; a digest copies them into the shared area —
+    every logical byte is written (at least) twice (Table 7)."""
+
+    name = "Strata"
+
+    def __init__(self, *args, digest_threshold: int = 8 * 1024 * 1024, **kw) -> None:
+        super().__init__(*args, **kw)
+        self.digest_threshold = digest_threshold
+        # private log: (file, file_offset, data bytes location)
+        self._log: List[Tuple[_BFile, int, int, int]] = []  # (file, off, pblk0, len)
+        self._log_file = _BFile("<private-log>")
+        self._log_bytes = 0
+        self._log_cursor = 0
+
+    def append(self, f: _BFile, data: bytes) -> None:
+        # LibFS: no trap. Write data + a log header into the private log.
+        self._ensure_blocks(self._log_file, self._log_cursor, len(data) + CACHELINE,
+                            "nova_alloc")
+        self.device.meter.add("pm_store_line", 1)      # log header
+        self._write_log_bytes(self._log_cursor, data)  # data into private log
+        self.device.fence()
+        self._log.append((f, f.size, self._log_cursor, len(data)))
+        self._log_cursor += len(data) + CACHELINE
+        self._log_bytes += len(data)
+        f.size += len(data)
+        self.device.meter.add("index_op", 1)
+        if self._log_bytes >= self.digest_threshold:
+            self.digest()
+
+    def _write_log_bytes(self, log_off: int, data: bytes) -> None:
+        pos = 0
+        for seg in self._log_file.extents.segments(log_off, len(data)):
+            self.device.write_data(seg.phys_addr, data[pos : pos + seg.length])
+            pos += seg.length
+
+    def write(self, f: _BFile, offset: int, data: bytes) -> None:
+        if offset >= f.size:
+            old = f.size
+            f.size = offset
+            self.append(f, data)
+            return
+        # overwrites also go through the log (Strata logs all updates)
+        self._ensure_blocks(self._log_file, self._log_cursor, len(data) + CACHELINE,
+                            "nova_alloc")
+        self.device.meter.add("pm_store_line", 1)
+        self._write_log_bytes(self._log_cursor, data)
+        self.device.fence()
+        self._log.append((f, offset, self._log_cursor, len(data)))
+        self._log_cursor += len(data) + CACHELINE
+        self._log_bytes += len(data)
+        f.size = max(f.size, offset + len(data))
+
+    def digest(self) -> None:
+        """KernFS digest: coalesce + copy private-log data to shared area.
+        This is the second write of every byte."""
+        self.device.meter.add("trap", 1)  # one kernel call per digest batch
+        for f, off, log_off, n in self._log:
+            data = bytearray(n)
+            pos = 0
+            for seg in self._log_file.extents.segments(log_off, n):
+                data[pos : pos + seg.length] = self.device.read_silent(seg.phys_addr,
+                                                                       seg.length)
+                pos += seg.length
+            self._ensure_blocks(f, off, n, "nova_alloc")
+            pos = 0
+            for seg in f.extents.segments(off, n):
+                self.device.buf[seg.phys_addr : seg.phys_addr + seg.length] = \
+                    memoryview(data)[pos : pos + seg.length]
+                self.device.meter.add("strata_digest_bytes", seg.length)
+                pos += seg.length
+            self.device.meter.add("index_op", 2)
+        self._log.clear()
+        self._log_bytes = 0
+        # recycle the private log region
+        blocks = self._log_file.extents.all_blocks()
+        if blocks:
+            self.pool.free(blocks)
+        self._log_file = _BFile("<private-log>")
+        self._log_cursor = 0
+        self.device.fence()
+
+    def read(self, f: _BFile, offset: int, n: int) -> bytes:
+        # LibFS read: must consult the private log first, then shared area
+        self.device.meter.add("index_op", 1)
+        n = max(0, min(n, f.size - offset))
+        if n == 0:
+            return b""
+        out = bytearray(n)
+        # shared area first
+        covered_shared = set()
+        try:
+            pos = 0
+            for seg in f.extents.segments(offset, n):
+                out[pos : pos + seg.length] = self.device.read(seg.phys_addr, seg.length)
+                pos += seg.length
+            covered_shared = {True}
+        except KeyError:
+            pass
+        # then overlay any undigested log entries (newest last)
+        for lf, off, log_off, ln in self._log:
+            if lf is not f:
+                continue
+            lo = max(offset, off)
+            hi = min(offset + n, off + ln)
+            if lo >= hi:
+                continue
+            pos = 0
+            chunk = bytearray(hi - lo)
+            for seg in self._log_file.extents.segments(log_off + (lo - off), hi - lo):
+                chunk[pos : pos + seg.length] = self.device.read(seg.phys_addr, seg.length)
+                pos += seg.length
+            out[lo - offset : hi - offset] = chunk
+        return bytes(out)
+
+    def fsync(self, f: _BFile) -> None:
+        # data already durable in the private log; digest makes it shared
+        self.digest()
+
+    def _log_meta_op(self) -> None:
+        self.device.meter.add("pm_store_line", 1)
+        self.device.meter.add("fence", 1)
+
+
+ALL_ENGINES = [DaxEngine, PmfsEngine, NovaRelaxedEngine, NovaStrictEngine, StrataEngine]

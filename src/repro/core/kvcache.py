@@ -1,0 +1,240 @@
+"""PagedKVCache: sequences-as-files over an HBM page pool (DESIGN.md §3.4).
+
+The SplitFS mechanism mapped onto the TPU serving plane:
+
+  PM device            -> pre-allocated HBM page pool  [num_pages, page_tokens, kv_heads, hd]
+  file                 -> a sequence's KV stream
+  staging file         -> the sequence's current (not yet full) pool page
+  append + nt store    -> in-graph scatter of one token's K/V into its page
+  relink on fsync      -> page-table row update when a page fills / on commit
+                          (metadata-only publish; zero data movement)
+  collection of mmaps  -> the device page table  [max_seqs, pages_per_seq] int32
+  hard links           -> refcounted page sharing (prefix cache / beam forks)
+  partial-block copy   -> copy-on-write of the *last, partially-filled* page
+                          when a forked sequence appends
+
+The host controller below owns metadata only (free lists, refcounts, extent
+maps); every data-path operation is a compiled JAX function over the pool
+arrays (kernels/kv_append, kernels/paged_attention).  The host never touches
+KV bytes — the same "data plane never traps" split as the file system.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class KVPoolFullError(Exception):
+    pass
+
+
+@dataclass(frozen=True)
+class KVGeometry:
+    """Pool geometry. page_tokens defaults to 128 = VREG lane width so a
+    page is one hardware tile deep (DESIGN.md §7)."""
+
+    num_pages: int
+    page_tokens: int = 128
+    max_seqs: int = 64
+    pages_per_seq: int = 256  # page-table row width (max 32k tokens @128)
+
+    @property
+    def max_tokens_per_seq(self) -> int:
+        return self.page_tokens * self.pages_per_seq
+
+
+@dataclass
+class _Seq:
+    sid: int
+    length: int = 0                      # tokens
+    pages: List[int] = field(default_factory=list)  # physical page ids, in order
+    committed_pages: int = 0             # pages published (relinkled) so far
+
+
+class PagedKVCache:
+    """Host-side metadata controller for one layer-group's KV pool.
+
+    Thread-safe; all methods are metadata-only and O(pages touched).
+    Device mirrors: ``page_table()`` and ``seq_lens()`` return int32 numpy
+    arrays to be shipped (or donated) to the compiled step function.
+    """
+
+    def __init__(self, geom: KVGeometry) -> None:
+        self.geom = geom
+        self._free: deque[int] = deque(range(geom.num_pages))
+        self._refcount = np.zeros(geom.num_pages, dtype=np.int32)
+        self._seqs: Dict[int, _Seq] = {}
+        self._free_sids: deque[int] = deque(range(geom.max_seqs))
+        self._lock = threading.Lock()
+        # device mirrors (kept hot; shipped as-is to jitted steps)
+        self._page_table = np.zeros((geom.max_seqs, geom.pages_per_seq),
+                                    dtype=np.int32)
+        self._seq_lens = np.zeros(geom.max_seqs, dtype=np.int32)
+        # stats (the serving-plane analogues of StoreStats)
+        self.pages_relinked = 0     # metadata-only publishes
+        self.pages_copied = 0       # CoW copies (partial-page forks)
+        self.alloc_failures = 0
+
+    # ------------------------------------------------------------- allocation
+
+    def _alloc_page(self) -> int:
+        if not self._free:
+            self.alloc_failures += 1
+            raise KVPoolFullError("KV page pool exhausted")
+        p = self._free.popleft()
+        self._refcount[p] = 1
+        return p
+
+    def _release_page(self, p: int) -> None:
+        self._refcount[p] -= 1
+        if self._refcount[p] == 0:
+            self._free.append(p)
+
+    @property
+    def num_free_pages(self) -> int:
+        with self._lock:
+            return len(self._free)
+
+    # ------------------------------------------------------------- sequence ops
+
+    def create_seq(self) -> int:
+        with self._lock:
+            if not self._free_sids:
+                raise KVPoolFullError("no free sequence slots")
+            sid = self._free_sids.popleft()
+            self._seqs[sid] = _Seq(sid)
+            self._seq_lens[sid] = 0
+            return sid
+
+    def free_seq(self, sid: int) -> None:
+        with self._lock:
+            seq = self._seqs.pop(sid)
+            for p in seq.pages:
+                self._release_page(p)
+            self._page_table[sid, :] = 0
+            self._seq_lens[sid] = 0
+            self._free_sids.append(sid)
+
+    def ensure_capacity(self, sid: int, new_len: int) -> List[int]:
+        """Reserve staging pages so the sequence can grow to ``new_len``
+        tokens.  Returns newly-allocated page ids.  This is the metadata
+        operation; it happens once per page_tokens tokens, not per token —
+        the serving-plane version of 'metadata ops are rare'."""
+        g = self.geom
+        if new_len > g.max_tokens_per_seq:
+            raise KVPoolFullError(f"sequence exceeds {g.max_tokens_per_seq} tokens")
+        with self._lock:
+            seq = self._seqs[sid]
+            need = -(-new_len // g.page_tokens)  # ceil
+            added: List[int] = []
+            while len(seq.pages) < need:
+                p = self._alloc_page()
+                self._page_table[sid, len(seq.pages)] = p
+                seq.pages.append(p)
+                added.append(p)
+            return added
+
+    def advance(self, sid: int, n_tokens: int = 1) -> None:
+        """Record that n tokens were appended (the device scatter happened
+        inside the compiled step).  Publishes filled pages (relink)."""
+        with self._lock:
+            seq = self._seqs[sid]
+            seq.length += n_tokens
+            self._seq_lens[sid] = seq.length
+            full = seq.length // self.geom.page_tokens
+            if full > seq.committed_pages:
+                # metadata-only publish of the now-full pages
+                self.pages_relinked += full - seq.committed_pages
+                seq.committed_pages = full
+
+    def seq_length(self, sid: int) -> int:
+        with self._lock:
+            return self._seqs[sid].length
+
+    # ------------------------------------------------------------- zero-copy fork
+
+    def fork(self, parent_sid: int) -> int:
+        """Beam/speculative fork: share all full pages by refcount (the
+        hard-link analogue).  The last, partially-filled page is copied on
+        the NEXT append by whichever branch appends first (CoW) — that copy
+        is the partial-block-copy analogue and the only data movement."""
+        with self._lock:
+            if not self._free_sids:
+                raise KVPoolFullError("no free sequence slots")
+            parent = self._seqs[parent_sid]
+            sid = self._free_sids.popleft()
+            child = _Seq(sid, length=parent.length,
+                         pages=list(parent.pages),
+                         committed_pages=parent.committed_pages)
+            for p in child.pages:
+                self._refcount[p] += 1
+            self._seqs[sid] = child
+            self._page_table[sid, : len(child.pages)] = child.pages
+            self._page_table[sid, len(child.pages):] = 0
+            self._seq_lens[sid] = child.length
+            return sid
+
+    def prepare_append(self, sid: int, n_tokens: int = 1) -> Optional[tuple[int, int]]:
+        """Called before appending to a sequence whose tail page may be
+        shared: if so, allocate a private copy and return (src_page,
+        dst_page) so the engine can schedule the device-side page copy.
+        Returns None when no copy is needed (the common case)."""
+        g = self.geom
+        with self._lock:
+            seq = self._seqs[sid]
+            tail_idx = seq.length // g.page_tokens
+            if seq.length % g.page_tokens == 0:
+                return None  # next token starts a fresh page
+            if tail_idx >= len(seq.pages):
+                return None
+            tail = seq.pages[tail_idx]
+            if self._refcount[tail] == 1:
+                return None
+            new = self._alloc_page()
+            self._release_page(tail)
+            seq.pages[tail_idx] = new
+            self._page_table[sid, tail_idx] = new
+            self.pages_copied += 1
+            return (tail, new)
+
+    # ------------------------------------------------------------- rollback (spec. decode)
+
+    def rollback(self, sid: int, new_len: int) -> None:
+        """Speculative-decode rejection: shrink to new_len. Metadata-only —
+        pages past the new tail are released, no data moves (the truncate-
+        via-relink analogue)."""
+        g = self.geom
+        with self._lock:
+            seq = self._seqs[sid]
+            assert new_len <= seq.length
+            keep = -(-new_len // g.page_tokens) if new_len else 0
+            for p in seq.pages[keep:]:
+                self._release_page(p)
+            self._page_table[sid, keep:] = 0
+            seq.pages = seq.pages[:keep]
+            seq.length = new_len
+            seq.committed_pages = min(seq.committed_pages, keep)
+            self._seq_lens[sid] = new_len
+
+    # ------------------------------------------------------------- device mirrors
+
+    def page_table(self) -> np.ndarray:
+        return self._page_table.copy()
+
+    def seq_lens(self) -> np.ndarray:
+        return self._seq_lens.copy()
+
+    def live_tokens(self) -> int:
+        with self._lock:
+            return int(sum(s.length for s in self._seqs.values()))
+
+    def utilization(self) -> float:
+        g = self.geom
+        with self._lock:
+            used = g.num_pages - len(self._free)
+        return used / g.num_pages

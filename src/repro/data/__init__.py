@@ -1,0 +1,2 @@
+"""Deterministic, resumable, elastic-reshardable synthetic data pipeline."""
+from .pipeline import PipelineState, TokenPipeline

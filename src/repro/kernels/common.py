@@ -1,0 +1,29 @@
+"""Kernel dispatch policy.
+
+TPU is the TARGET; this container is CPU.  Each op has three paths:
+
+  * ``ref``        pure-jnp oracle (always available; used for CPU lowering,
+                   the multi-pod dry-run, and as the ground truth in tests)
+  * ``pallas``     the TPU kernel (pl.pallas_call with BlockSpec tiling)
+  * ``interpret``  the same kernel body executed by the Pallas interpreter
+                   on CPU — how kernels are validated here
+
+Resolution order: explicit ``impl=`` argument > REPRO_KERNEL_IMPL env var >
+platform default (tpu->pallas, else ref).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+
+def resolve_impl(impl: Optional[str] = None) -> str:
+    if impl is None:
+        impl = os.environ.get("REPRO_KERNEL_IMPL")
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    assert impl in ("ref", "pallas", "interpret"), impl
+    return impl

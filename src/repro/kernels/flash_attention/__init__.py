@@ -1,0 +1,2 @@
+from .ops import attention, local_attention_ref
+from .ref import attention_ref

@@ -1,0 +1,219 @@
+"""Blockwise (memory-efficient) attention in pure JAX — the lowering path.
+
+XLA cannot fuse softmax(QK^T)V, so a naive implementation materializes the
+[B, H, S, S] score matrix: 68 GB/chip for the 32 K-token cells.  This module
+is flash attention expressed as JAX control flow so it compiles on ANY
+backend (CPU dry-run included) with O(S * block) live memory and the true
+O(S*W) FLOPs for sliding-window layers:
+
+  * forward: python-unrolled q chunks; per chunk, a lax.scan over exactly
+    the kv blocks the causal/window band makes visible (static per chunk!)
+    carrying the online-softmax state;
+  * backward: custom VJP with the standard flash dq/dk/dv recomputation,
+    same blockwise structure, saving only (out, m+log l) row statistics.
+
+The Pallas kernel (kernel.py) is the TPU-native version of the same
+schedule; tests assert all three implementations agree.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...scan_util import unrolling
+
+NEG_INF = -1e30
+DEFAULT_BLOCK = 1024
+
+
+def _band(i: int, n_q_blocks: int, n_kv_blocks: int, blk_q: int, blk_k: int,
+          causal: bool, window: Optional[int],
+          kv_len: Optional[int] = None) -> Tuple[int, int]:
+    """Static kv block range [lo, hi) visible to q chunk i."""
+    q_lo = i * blk_q
+    q_hi = (i + 1) * blk_q - 1
+    hi = n_kv_blocks if not causal else min(n_kv_blocks, q_hi // blk_k + 1)
+    if kv_len is not None:
+        hi = min(hi, -(-kv_len // blk_k))     # skip fully-padded blocks
+    lo = 0
+    if window is not None:
+        lo = max(0, (q_lo - window + 1) // blk_k)
+    return lo, hi
+
+
+def _mask(q_pos, k_pos, causal: bool, window: Optional[int],
+          kv_len: Optional[int] = None):
+    m = jnp.ones(jnp.broadcast_shapes(q_pos.shape, k_pos.shape), bool)
+    if causal:
+        m &= k_pos <= q_pos
+    if window is not None:
+        m &= k_pos > q_pos - window
+    if kv_len is not None:
+        m &= k_pos < kv_len
+    return m
+
+
+def _fwd_chunk(qc, k, v, i, blk_q, blk_k, lo, hi, scale, causal, window,
+               softcap, kv_len=None):
+    """qc: [B, blk_q, H, D] (heads already expanded). Returns out chunk and
+    per-row logsumexp stats (for the backward)."""
+    B, bq, H, D = qc.shape
+    Dv = v.shape[-1]
+    qf = qc.astype(jnp.float32) * scale
+
+    def body(carry, j):
+        m_prev, l_prev, acc = carry
+        kj = jax.lax.dynamic_slice_in_dim(k, j * blk_k, blk_k, 1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * blk_k, blk_k, 1)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kj.astype(jnp.float32))
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = i * blk_q + jnp.arange(bq)[:, None]
+        k_pos = j * blk_k + jnp.arange(blk_k)[None, :]
+        msk = _mask(q_pos, k_pos, causal, window, kv_len)[None, None]
+        s = jnp.where(msk, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, s.max(-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.where(msk, jnp.exp(s - m_cur[..., None]), 0.0)
+        l_cur = l_prev * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vj.astype(jnp.float32))
+        return (m_cur, l_cur, acc), None
+
+    m0 = jnp.full((B, H, bq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, bq), jnp.float32)
+    acc0 = jnp.zeros((B, H, bq, Dv), jnp.float32)
+    if unrolling():
+        carry = (m0, l0, acc0)
+        for j in range(lo, hi):
+            carry, _ = body(carry, j)
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), jnp.arange(lo, hi))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    lse = m + jnp.log(jnp.maximum(l, 1e-20))
+    return out.transpose(0, 2, 1, 3), lse          # [B, bq, H, D], [B, H, bq]
+
+
+def _expand_kv(k, H):
+    KV = k.shape[2]
+    if KV == H:
+        return k
+    return jnp.repeat(k, H // KV, axis=2)
+
+
+def _blockwise_fwd_impl(q, k, v, causal, window, softcap, blk_q, blk_k,
+                        kv_len=None):
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    blk_q = min(blk_q, Sq)
+    blk_k = min(blk_k, Sk)
+    assert Sq % blk_q == 0 and Sk % blk_k == 0
+    nq, nk = Sq // blk_q, Sk // blk_k
+    ke = _expand_kv(k, H)
+    ve = _expand_kv(v, H)
+    scale = D ** -0.5
+    outs, lses = [], []
+    for i in range(nq):
+        qc = jax.lax.dynamic_slice_in_dim(q, i * blk_q, blk_q, 1)
+        lo, hi = _band(i, nq, nk, blk_q, blk_k, causal, window, kv_len)
+        o, lse = _fwd_chunk(qc, ke, ve, i, blk_q, blk_k, lo, hi, scale,
+                            causal, window, softcap, kv_len)
+        outs.append(o)
+        lses.append(lse)
+    out = jnp.concatenate(outs, axis=1).astype(q.dtype)
+    lse = jnp.concatenate(lses, axis=2)             # [B, H, Sq]
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def blockwise_attention(q, k, v, causal=True, window=None, softcap=None,
+                        blk_q=DEFAULT_BLOCK, blk_k=DEFAULT_BLOCK, kv_len=None):
+    out, _ = _blockwise_fwd_impl(q, k, v, causal, window, softcap, blk_q,
+                                 blk_k, kv_len)
+    return out
+
+
+def _bw_fwd(q, k, v, causal, window, softcap, blk_q, blk_k, kv_len=None):
+    out, lse = _blockwise_fwd_impl(q, k, v, causal, window, softcap, blk_q,
+                                   blk_k, kv_len)
+    return out, (q, k, v, out, lse)
+
+
+def _bw_bwd(causal, window, softcap, blk_q, blk_k, kv_len, res, g):
+    q, k, v, out, lse = res
+    B, Sq, H, D = q.shape
+    Dv = v.shape[-1]
+    Sk, KV = k.shape[1], k.shape[2]
+    blk_q = min(blk_q, Sq)
+    blk_k = min(blk_k, Sk)
+    nq, nk = Sq // blk_q, Sk // blk_k
+    G = H // KV
+    ke = _expand_kv(k, H)
+    ve = _expand_kv(v, H)
+    scale = D ** -0.5
+    gf = g.astype(jnp.float32)
+    # delta_i = rowsum(dO * O)
+    delta = jnp.einsum("bqhd,bqhd->bhq", gf, out.astype(jnp.float32))
+
+    dq = jnp.zeros((B, Sq, H, D), jnp.float32)
+    dk = jnp.zeros((B, Sk, H, D), jnp.float32)
+    dv = jnp.zeros((B, Sk, H, Dv), jnp.float32)
+
+    for i in range(nq):
+        qc = jax.lax.dynamic_slice_in_dim(q, i * blk_q, blk_q, 1).astype(jnp.float32)
+        gc = jax.lax.dynamic_slice_in_dim(gf, i * blk_q, blk_q, 1)
+        lse_c = jax.lax.dynamic_slice_in_dim(lse, i * blk_q, blk_q, 2)
+        delta_c = jax.lax.dynamic_slice_in_dim(delta, i * blk_q, blk_q, 2)
+        lo, hi = _band(i, nq, nk, blk_q, blk_k, causal, window, kv_len)
+
+        def body(carry, j, qc=qc, gc=gc, lse_c=lse_c, delta_c=delta_c, i=i):
+            dqc, dk_acc, dv_acc = carry
+            kj = jax.lax.dynamic_slice_in_dim(ke, j * blk_k, blk_k, 1).astype(jnp.float32)
+            vj = jax.lax.dynamic_slice_in_dim(ve, j * blk_k, blk_k, 1).astype(jnp.float32)
+            s_raw = jnp.einsum("bqhd,bkhd->bhqk", qc * scale, kj)
+            if softcap is not None:
+                s = softcap * jnp.tanh(s_raw / softcap)
+            else:
+                s = s_raw
+            q_pos = i * blk_q + jnp.arange(blk_q)[:, None]
+            k_pos = j * blk_k + jnp.arange(blk_k)[None, :]
+            msk = _mask(q_pos, k_pos, causal, window, kv_len)[None, None]
+            p = jnp.where(msk, jnp.exp(s - lse_c[..., None]), 0.0)
+            dp = jnp.einsum("bqhd,bkhd->bhqk", gc, vj)
+            ds = p * (dp - delta_c[..., None])
+            if softcap is not None:
+                ds = ds * (1.0 - (s / softcap) ** 2)
+            dqc = dqc + jnp.einsum("bhqk,bkhd->bqhd", ds, kj) * scale
+            dkj = jnp.einsum("bhqk,bqhd->bkhd", ds, qc) * scale
+            dvj = jnp.einsum("bhqk,bqhd->bkhd", p, gc)
+            dk_acc = jax.lax.dynamic_update_slice_in_dim(
+                dk_acc, jax.lax.dynamic_slice_in_dim(dk_acc, j * blk_k, blk_k, 1) + dkj,
+                j * blk_k, 1)
+            dv_acc = jax.lax.dynamic_update_slice_in_dim(
+                dv_acc, jax.lax.dynamic_slice_in_dim(dv_acc, j * blk_k, blk_k, 1) + dvj,
+                j * blk_k, 1)
+            return (dqc, dk_acc, dv_acc), None
+
+        dq0 = jnp.zeros((B, blk_q, H, D), jnp.float32)
+        if unrolling():
+            carry = (dq0, dk, dv)
+            for j in range(lo, hi):
+                carry, _ = body(carry, j)
+            dqc, dk, dv = carry
+        else:
+            (dqc, dk, dv), _ = jax.lax.scan(body, (dq0, dk, dv),
+                                            jnp.arange(lo, hi))
+        dq = jax.lax.dynamic_update_slice_in_dim(dq, dqc, i * blk_q, 1)
+
+    if KV != H:  # fold grouped heads back
+        dk = dk.reshape(B, Sk, KV, G, D).sum(3)
+        dv = dv.reshape(B, Sk, KV, G, D).sum(3)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+blockwise_attention.defvjp(_bw_fwd, _bw_bwd)

@@ -1,0 +1,151 @@
+"""Public fused-attention op: dispatches ref / pallas / interpret.
+
+Also provides the *chunked* sliding-window path used by the ref/dry-run
+pipeline: when a window is set, attention is computed over (current, prev)
+key chunks of width ``window`` instead of the full S x S score matrix, so
+the compiled HLO carries the true O(S*W) cost of local attention rather
+than a masked O(S^2) — this is what makes the 500 K-token cells lowerable
+and is counted as a perf-relevant structure in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..common import resolve_impl
+from .blockwise import DEFAULT_BLOCK, blockwise_attention
+from .kernel import flash_attention as _flash_kernel
+from .ref import attention_ref
+
+
+def local_attention_ref(
+    q: jnp.ndarray,            # [B, S, H, D]
+    k: jnp.ndarray,            # [B, S, KV, D]
+    v: jnp.ndarray,
+    *,
+    window: int,
+    softcap: Optional[float] = None,
+) -> jnp.ndarray:
+    """Causal sliding-window attention via (prev, cur) chunk pairs.
+    Exactly equal to attention_ref(causal=True, window=window) for S % W == 0
+    (callers pad); costs O(S * 2W * D) instead of O(S^2 * D)."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    W = window
+    assert S % W == 0, (S, W)
+    C = S // W
+
+    qf = q.astype(jnp.float32).reshape(B, C, W, H, D)
+    kf = jnp.repeat(k.astype(jnp.float32), G, axis=2).reshape(B, C, W, H, D)
+    vf = jnp.repeat(v.astype(jnp.float32), G, axis=2).reshape(B, C, W, H, D)
+    # previous chunk (zeros before the first)
+    kprev = jnp.pad(kf[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    vprev = jnp.pad(vf[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    kcat = jnp.concatenate([kprev, kf], axis=2)      # [B, C, 2W, H, D]
+    vcat = jnp.concatenate([vprev, vf], axis=2)
+
+    scale = D ** -0.5
+    logits = jnp.einsum("bcqhd,bckhd->bchqk", qf * scale, kcat)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(W)[:, None] + W                 # within the 2W frame
+    kpos = jnp.arange(2 * W)[None, :]
+    mask = (kpos <= qpos) & (kpos > qpos - W)
+    first = jnp.arange(C)[:, None, None] > 0          # chunk 0 has no prev
+    maskc = mask[None] & (first | (kpos[None] >= W))
+    logits = jnp.where(maskc[:, None, :, :][None], logits, -1e30)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs * (logits > -1e29)
+    denom = jnp.maximum(probs.sum(axis=-1, keepdims=True), 1e-20)
+    out = jnp.einsum("bchqk,bckhd->bcqhd", probs / denom, vcat)
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def attention(
+    q: jnp.ndarray,            # [B, Sq, H, D]
+    k: jnp.ndarray,            # [B, Sk, KV, D]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_offset: int = 0,
+    lengths: Optional[jnp.ndarray] = None,
+    impl: Optional[str] = None,
+) -> jnp.ndarray:
+    """Fused attention entry point used by every model block."""
+    impl = resolve_impl(impl)
+    Sq, Sk = q.shape[1], k.shape[1]
+    if impl == "ref":
+        # Large shapes lower through the blockwise flash path: O(S*block)
+        # memory and true O(S*W) FLOPs for windows — the dense oracle stays
+        # the ground truth for small shapes and tests.
+        kv_len = None
+        q_orig = None
+        if (not causal and q_offset == 0 and lengths is None
+                and (Sq % 128 or Sk % 128) and Sq * Sk > 512 * 512):
+            # pad to block multiples; the static kv_len mask keeps padded
+            # keys out of the softmax and padded query rows are sliced off
+            # (whisper's 1500-frame encoder / cross attention)
+            pad_k = (-Sk) % 128
+            if pad_k:
+                k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+                kv_len, Sk = Sk, Sk + pad_k
+            pad_q = (-Sq) % 128
+            if pad_q:
+                q_orig, Sq = Sq, Sq + pad_q
+                q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        blockwise_ok = (q_offset == 0 and lengths is None
+                        and (not causal or Sq == Sk)
+                        and Sq % 128 == 0 and Sk % 128 == 0)
+        if blockwise_ok and (Sq * Sk > 512 * 512 or window is not None):
+            blk_q = min(DEFAULT_BLOCK, Sq)
+            blk_k = min(DEFAULT_BLOCK, Sk)
+            if window is not None:
+                blk_k = min(blk_k, max(128, 1 << (window - 1).bit_length() >> 1))
+            while Sq % blk_q:
+                blk_q //= 2
+            while Sk % blk_k:
+                blk_k //= 2
+            out = blockwise_attention(q, k, v, causal, window, softcap,
+                                      blk_q, blk_k, kv_len)
+            return out[:, :q_orig] if q_orig else out
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, softcap=softcap, lengths=lengths)
+    # pallas path handles the dense train/prefill case; anything else
+    # falls back to the oracle
+    if q_offset != 0 or lengths is not None or Sq % 128 or Sk % 128:
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, softcap=softcap, lengths=lengths)
+    return _attention_cv(q, k, v, causal, window, softcap, impl == "interpret")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _attention_cv(q, k, v, causal, window, softcap, interpret):
+    return _flash_kernel(q, k, v, causal=causal, window=window,
+                         softcap=softcap, interpret=interpret)
+
+
+def _attention_cv_fwd(q, k, v, causal, window, softcap, interpret):
+    out = _attention_cv(q, k, v, causal, window, softcap, interpret)
+    return out, (q, k, v)
+
+
+def _attention_cv_bwd(causal, window, softcap, interpret, res, g):
+    # Backward runs through the oracle's autodiff (fwd kernel + XLA bwd);
+    # dedicated bwd kernels are a TPU-side optimization, see DESIGN.md.
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal,
+                                         window=window, softcap=softcap),
+        q, k, v)
+    return vjp(g)
+
+
+_attention_cv.defvjp(_attention_cv_fwd, _attention_cv_bwd)

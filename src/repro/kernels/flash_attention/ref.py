@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for fused attention (causal / sliding-window / GQA).
+
+This is the semantic ground truth the Pallas kernel is validated against
+(tests sweep shapes/dtypes with assert_allclose), and the implementation
+used on CPU hosts where Pallas TPU kernels cannot run natively.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,                    # [B, Sq, H, D]
+    k: jnp.ndarray,                    # [B, Sk, KV, D]
+    v: jnp.ndarray,                    # [B, Sk, KV, D]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,      # sliding window (tokens), None = full
+    q_offset: int = 0,                 # absolute position of q[0] (decode)
+    softcap: Optional[float] = None,
+    lengths: Optional[jnp.ndarray] = None,  # [B] valid kv length per batch
+) -> jnp.ndarray:
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    # GQA: expand kv heads to query heads
+    kf = jnp.repeat(kf, G, axis=2)
+    vf = jnp.repeat(vf, G, axis=2)
+
+    scale = D ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf * scale, kf)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    mask_b = jnp.broadcast_to(mask[None, None], logits.shape)
+    if lengths is not None:
+        valid = kpos[None] < lengths[:, None, None]          # [B, 1, Sk]
+        mask_b = mask_b & valid[:, None, :, :]
+
+    logits = jnp.where(mask_b, logits, -1e30)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs * mask_b            # fully-masked rows -> 0, not NaN
+    denom = probs.sum(axis=-1, keepdims=True)
+    probs = probs / jnp.maximum(denom, 1e-20)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,2 @@
+from .ops import kv_append
+from .ref import kv_append_ref

@@ -1,0 +1,26 @@
+"""Public KV-append op: ref / pallas / interpret dispatch."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from ..common import resolve_impl
+from .kernel import kv_append as _append_kernel
+from .ref import kv_append_ref
+
+
+def kv_append(
+    pool: jnp.ndarray,        # [P, T, KV, D]
+    new: jnp.ndarray,         # [B, KV, D]
+    page_ids: jnp.ndarray,    # [B] int32
+    slot_ids: jnp.ndarray,    # [B] int32
+    *,
+    impl: Optional[str] = None,
+) -> jnp.ndarray:
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return kv_append_ref(pool, new, page_ids, slot_ids)
+    return _append_kernel(pool, new, page_ids, slot_ids,
+                          interpret=impl == "interpret")

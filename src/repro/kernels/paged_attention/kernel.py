@@ -1,0 +1,138 @@
+"""Pallas TPU paged decode attention.
+
+One query token per sequence attends over KV pages addressed by a page
+table.  The page table and sequence lengths ride in as *scalar prefetch*
+operands, so each grid step's BlockSpec index map dereferences
+``page_table[b, n]`` — the pool page is DMA'd straight from HBM into VMEM
+with no gather materialization.  This is the device-side collection-of-
+mmaps: the kernel walks the extent map exactly like U-Split routes a read.
+
+Grid ``(B, n_pages)`` with pages innermost (sequential); online-softmax
+state in VMEM scratch.  Pages past a sequence's length — and pages outside
+the sliding window for local-attention layers — are skipped via ``pl.when``
+(the staging-page analogue: allocated but unpublished pages cost nothing).
+
+VMEM per step: one KV page (T*KV*D*2) + q (H*D) + state (~H*(D+2)) floats;
+for T=128, KV=8, D=128, H=64 that is ~1.3 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(pt_ref, len_ref, q_ref, kpool_ref, vpool_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, page_tokens: int, group: int,
+                  window: Optional[int], softcap: Optional[float],
+                  num_page_steps: int):
+    b = pl.program_id(0)
+    n = pl.program_id(1)
+
+    @pl.when(n == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    page_lo = n * page_tokens
+    run = page_lo < length
+    if window is not None:
+        run = jnp.logical_and(run, page_lo + page_tokens > length - 1 - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                     # [H, D]
+        k = kpool_ref[0, :, 0, :].astype(jnp.float32)        # [T, D] (one kv head)
+        v = vpool_ref[0, :, 0, :].astype(jnp.float32)        # [T, D]
+        scale = q.shape[-1] ** -0.5
+        s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [H, T]
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = page_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < length
+        if window is not None:
+            mask &= kpos > length - 1 - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        m_curr = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_curr)
+        p = jnp.where(mask, jnp.exp(s - m_curr[:, None]), 0.0)
+        l_ref[:, 0] = l_ref[:, 0] * alpha + p.sum(axis=-1)
+        m_ref[:, 0] = m_curr
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(n == num_page_steps - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[:, 0], 1e-20)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "interpret"),
+)
+def paged_attention(
+    q: jnp.ndarray,            # [B, H, D]
+    pool_k: jnp.ndarray,       # [P, T, KV, D]
+    pool_v: jnp.ndarray,       # [P, T, KV, D]
+    page_table: jnp.ndarray,   # [B, N] int32
+    lengths: jnp.ndarray,      # [B] int32
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, D = q.shape
+    P, T, KV, _ = pool_k.shape
+    N = page_table.shape[1]
+    group = H // KV
+    assert H % KV == 0
+
+    # One grid pass per kv head keeps the VMEM page slice 2-D; for GQA we
+    # fold the kv-head choice into the grid's head axis when KV > 1.
+    def run_for_kv(kv_idx: int, q_h: jnp.ndarray) -> jnp.ndarray:
+        kernel = functools.partial(
+            _paged_kernel, page_tokens=T, group=group, window=window,
+            softcap=softcap, num_page_steps=N)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, N),
+            in_specs=[
+                pl.BlockSpec((1, group, D), lambda b, n, pt, ln: (b, 0, 0)),
+                pl.BlockSpec((1, T, 1, D),
+                             lambda b, n, pt, ln: (pt[b, n], 0, kv_idx, 0)),
+                pl.BlockSpec((1, T, 1, D),
+                             lambda b, n, pt, ln: (pt[b, n], 0, kv_idx, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, group, D), lambda b, n, pt, ln: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((group, 1), jnp.float32),
+                pltpu.VMEM((group, 1), jnp.float32),
+                pltpu.VMEM((group, D), jnp.float32),
+            ],
+        )
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((B, group, D), q.dtype),
+            compiler_params=pltpu.CompilerParams(
+                dimension_semantics=("parallel", "arbitrary"),
+            ),
+            interpret=interpret,
+        )(page_table, lengths, q_h, pool_k, pool_v)
+
+    qh = q.reshape(B, KV, group, D)
+    outs = [run_for_kv(i, qh[:, i]) for i in range(KV)]
+    return jnp.stack(outs, axis=1).reshape(B, H, D)

@@ -1,0 +1,31 @@
+"""Public paged decode-attention op: ref / pallas / interpret dispatch."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from ..common import resolve_impl
+from .kernel import paged_attention as _paged_kernel
+from .ref import paged_attention_ref
+
+
+def paged_attention(
+    q: jnp.ndarray,            # [B, H, D]
+    pool_k: jnp.ndarray,       # [P, T, KV, D]
+    pool_v: jnp.ndarray,       # [P, T, KV, D]
+    page_table: jnp.ndarray,   # [B, N] int32
+    lengths: jnp.ndarray,      # [B] int32
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    impl: Optional[str] = None,
+) -> jnp.ndarray:
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return paged_attention_ref(q, pool_k, pool_v, page_table, lengths,
+                                   window=window, softcap=softcap)
+    return _paged_kernel(q, pool_k, pool_v, page_table, lengths,
+                         window=window, softcap=softcap,
+                         interpret=impl == "interpret")

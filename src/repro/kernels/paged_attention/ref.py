@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for paged decode attention.
+
+One new query token per sequence attends over a KV cache scattered across
+pool pages addressed by a page table — the device half of the paper's
+collection-of-mmaps (DESIGN.md §3.4).
+
+GQA is evaluated with grouped einsums (q reshaped to [B, KV, G, D]) so the
+gathered K/V are never head-replicated — keeps the lowered memory honest.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def paged_attention_ref(
+    q: jnp.ndarray,            # [B, H, D]          (one token per sequence)
+    pool_k: jnp.ndarray,       # [P, T, KV, D]      (page pool)
+    pool_v: jnp.ndarray,       # [P, T, KV, D]
+    page_table: jnp.ndarray,   # [B, N] int32       (physical page per slot)
+    lengths: jnp.ndarray,      # [B] int32          (valid tokens per sequence)
+    *,
+    softcap: Optional[float] = None,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    B, H, D = q.shape
+    P, T, KV, _ = pool_k.shape
+    N = page_table.shape[1]
+    G = H // KV
+
+    from ...models.shardctx import constrain_dim_model
+
+    # gather the sequence's pages: [B, N, T, KV, D] -> [B, S, KV, D];
+    # the head dim stays TP-sharded (psum the logits, never gather the KV)
+    k = constrain_dim_model(
+        pool_k[page_table].reshape(B, N * T, KV, D), 3).astype(jnp.float32)
+    v = constrain_dim_model(
+        pool_v[page_table].reshape(B, N * T, KV, D), 3).astype(jnp.float32)
+
+    qg = (q.astype(jnp.float32) * (D ** -0.5)).reshape(B, KV, G, D)
+    qg = constrain_dim_model(qg, 3)      # d-sharded both sides => psum of
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k)      # [B, KV, G, S] logits
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    kpos = jnp.arange(N * T)[None, :]                  # [1, S]
+    mask = kpos < lengths[:, None]
+    if window is not None:
+        mask &= kpos > (lengths[:, None] - 1 - window)
+    mask = mask[:, None, None, :]                      # [B, 1, 1, S]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True)) * mask
+    denom = jnp.maximum(probs.sum(axis=-1, keepdims=True), 1e-20)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs / denom, v)
+    return out.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,2 @@
+from .ops import ssd_chunk
+from .ref import ssd_chunk_ref

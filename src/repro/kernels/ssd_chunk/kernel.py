@@ -1,0 +1,82 @@
+"""Pallas TPU kernel for the SSD intra-chunk block.
+
+Grid ``(B, H_tiles)``: each step computes one (batch, head-tile) slice of
+the chunk entirely in VMEM — the L x L decay-weighted score matrix is
+formed once per head tile and contracted against the inputs with two MXU
+matmuls.  For the production chunk L=256, N=128, P=64, a head tile of 8:
+VMEM = L*N*2 (B,C) + L*L*4 (scores) + L*8*P*2 (x, y) + small ≈ 0.9 MB.
+
+The decay mask uses the same exp(cs_i - cs_j) trick as the oracle; rows are
+keyed by the head-tile's own dt/cumsum columns, so the kernel reproduces
+ssd_chunk_ref exactly (tests sweep shapes/dtypes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, cs_ref, b_ref, c_ref, o_ref, *, L: int,
+                h_tile: int):
+    xf = x_ref[0].astype(jnp.float32)          # [L, h_tile, P]
+    dt = dt_ref[0].astype(jnp.float32)         # [L, h_tile]
+    cs = cs_ref[0].astype(jnp.float32)         # [L, h_tile]
+    Bm = b_ref[0].astype(jnp.float32)          # [L, N]
+    Cm = c_ref[0].astype(jnp.float32)          # [L, N]
+
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [L, L]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    causal = ii >= jj
+    # per head: w[i,j] = scores[i,j] * exp(cs[i]-cs[j]) * dt[j]
+    acc = jnp.zeros_like(o_ref[0], dtype=jnp.float32)  # [L, h_tile, P]
+    for h in range(h_tile):                    # static, small
+        decay = jnp.where(causal, jnp.exp(cs[:, h][:, None] - cs[:, h][None, :]),
+                          0.0)
+        w = scores * decay * dt[:, h][None, :]          # [L, L]
+        yh = jax.lax.dot_general(w, xf[:, h, :], (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [L, P]
+        acc = acc.at[:, h, :].set(yh)
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("h_tile", "interpret"))
+def ssd_chunk(
+    x: jnp.ndarray,        # [B, L, H, P]
+    dt: jnp.ndarray,       # [B, L, H]
+    dA_cs: jnp.ndarray,    # [B, L, H]
+    Bm: jnp.ndarray,       # [B, L, N]
+    Cm: jnp.ndarray,       # [B, L, N]
+    *,
+    h_tile: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    h_tile = min(h_tile, H)
+    assert H % h_tile == 0, (H, h_tile)
+    grid = (B, H // h_tile)
+    kernel = functools.partial(_ssd_kernel, L=L, h_tile=h_tile)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, h_tile, P), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, L, h_tile), lambda b, h: (b, 0, h)),
+            pl.BlockSpec((1, L, h_tile), lambda b, h: (b, 0, h)),
+            pl.BlockSpec((1, L, N), lambda b, h: (b, 0, 0)),
+            pl.BlockSpec((1, L, N), lambda b, h: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, L, h_tile, P), lambda b, h: (b, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(x, dt, dA_cs, Bm, Cm)

@@ -1,0 +1,20 @@
+"""Public SSD intra-chunk op: ref / pallas / interpret dispatch."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from ..common import resolve_impl
+from .kernel import ssd_chunk as _ssd_kernel
+from .ref import ssd_chunk_ref
+
+
+def ssd_chunk(x, dt, dA_cs, Bm, Cm, *, impl: Optional[str] = None,
+              h_tile: int = 8) -> jnp.ndarray:
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return ssd_chunk_ref(x, dt, dA_cs, Bm, Cm)
+    return _ssd_kernel(x, dt, dA_cs, Bm, Cm, h_tile=h_tile,
+                       interpret=impl == "interpret")

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the Mamba2 SSD intra-chunk block.
+
+The SSD block decomposition's quadratic piece: within one chunk of length
+L, output[i] = sum_{j<=i} C_i·B_j * exp(dA_cs[i]-dA_cs[j]) * dt_j * x_j.
+This is the matmul-shaped (MXU-friendly) hotspot of the attention-free
+archs — the TPU-native replacement for the GPU parallel-scan formulation
+(DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(
+    x: jnp.ndarray,        # [B, L, H, P]   (chunk of inputs, P = head dim)
+    dt: jnp.ndarray,       # [B, L, H]      (softplus'd step sizes)
+    dA_cs: jnp.ndarray,    # [B, L, H]      (within-chunk cumsum of dt*A)
+    Bm: jnp.ndarray,       # [B, L, N]      (input projection, shared heads)
+    Cm: jnp.ndarray,       # [B, L, N]      (output projection, shared heads)
+) -> jnp.ndarray:
+    """Returns the intra-chunk output y [B, L, H, P] (inter-chunk terms are
+    the caller's scan)."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    csf = dA_cs.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    L = x.shape[1]
+    diff = csf[:, :, None, :] - csf[:, None, :, :]       # [B, i, j, H]
+    ii = jnp.arange(L)
+    causal = (ii[:, None] >= ii[None, :])[None, :, :, None]
+    decay = jnp.where(causal, jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bin,bjn->bij", Cf, Bf)          # [B, i, j]
+    w = scores[:, :, :, None] * decay * dtf[:, None, :, :]
+    return jnp.einsum("bijh,bjhp->bihp", w, xf).astype(x.dtype)

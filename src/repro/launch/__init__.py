@@ -1,0 +1,2 @@
+"""Launch layer: production mesh, ShapeDtypeStruct input specs, multi-pod
+dry-run, and the train/serve drivers."""

@@ -1,0 +1,309 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production mesh and record memory / cost / collective analysis.
+
+The two lines above MUST precede every other import (jax locks the device
+count on first init) — this module is the ONLY place the 512 placeholder
+devices exist; tests and benches see 1 CPU device.
+
+Roofline measurement methodology (EXPERIMENTS.md §Roofline): XLA's cost
+analysis counts while-loop bodies ONCE, so scanned-over-layers programs are
+structurally undercounted.  For each cell we therefore ALSO lower 1-group
+and 2-group variants with every scan unrolled (exact costs for two depths)
+and extrapolate linearly to the full depth — exact because group bodies are
+identical.  The full-depth compile remains the green/red gate and the
+source of memory analysis + compile-time.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--serve-impl shard_map]
+  python -m repro.launch.dryrun --all --measure   # adds roofline terms
+
+Artifacts land in runs/dryrun/<arch>__<shape>__<mesh>[__variant].json.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from ..configs import ARCH_IDS, get_config
+from ..configs.shapes import ALL_SHAPES, shapes_for
+from ..models.registry import build_model
+from ..scan_util import unroll_scans
+from ..train.optimizer import AdamWConfig
+from ..train.step import make_train_step
+from .hlo_analysis import analyze_collectives, model_flops_for, roofline_terms
+from .mesh import make_production_mesh
+from .specs import abstract_state, decode_specs, train_batch_specs
+
+SHAPE_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+
+def _scaled_cfg(cfg, mult: int):
+    """A ``mult``-group variant of the arch (1 group = one pattern period)."""
+    period = len(cfg.block_pattern or ("attn",))
+    upd = {"n_layers": period * mult}
+    if cfg.family == "encdec":
+        upd.update(n_enc_layers=mult, n_dec_layers=mult)
+    return dataclasses.replace(cfg, **upd)
+
+
+def _n_groups(cfg) -> float:
+    period = len(cfg.block_pattern or ("attn",))
+    if cfg.family == "encdec":
+        return float(cfg.n_enc_layers)          # enc+dec scale together
+    return cfg.n_layers / period
+
+
+def build_lowered(cfg, shape, mesh, *, serve_impl: str = "gspmd",
+                  microbatches: int = 1, page_tokens: int = 128,
+                  multi_pod: bool = False, serve_dtype: str = "f32",
+                  compress: bool = False):
+    if shape.kind in ("prefill", "decode") and serve_dtype == "bf16":
+        import jax.numpy as jnp
+
+        cfg = dataclasses.replace(cfg, param_dtype=jnp.bfloat16)
+    api = build_model(cfg)
+    if shape.kind == "train":
+        # int8-compressed pod reduction is OPT-IN: XLA's SPMD partitioner
+        # CHECK-fails (spmd_partitioner_util.cc:504, AllGatherShards iota
+        # group expansion) replicating 2D-sharded operands inside manual-pod
+        # regions for several archs; plain 3-axis GSPMD is the gate default.
+        use_compress = compress and multi_pod and cfg.family != "encdec"
+        step, _, _, _ = make_train_step(api, mesh, AdamWConfig(),
+                                        microbatches=microbatches,
+                                        compress_pod_grads=use_compress)
+        state = abstract_state(api)
+        if use_compress:
+            import numpy as _np
+
+            import jax.numpy as jnp
+            n = sum(int(_np.prod(p.shape))
+                    for p in jax.tree.leaves(state["params"]))
+            span = mesh.shape["data"] * mesh.shape["model"]
+            state["err"] = jax.ShapeDtypeStruct((-(-n // span) * span,),
+                                                jnp.float32)
+        batch = train_batch_specs(cfg, shape)
+        return step.lower(state, batch)
+    if shape.kind == "prefill":
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from ..dist.sharding import batch_axes
+        from ..models.shardctx import (activation_batch_axes,
+                                       serving_model_axis)
+        from ..models.spec import abstract_params
+        from ..serve.step import serve_param_shardings
+
+        param_sh = serve_param_shardings(api, mesh)
+        ba = batch_axes(mesh)
+        md = "model" if "model" in mesh.shape else None
+
+        def prefill_step(params, batch):
+            with activation_batch_axes(ba), serving_model_axis(md):
+                logits = api.logits(params, batch)
+            return logits[:, -1, :]             # only the sampling position
+
+        step = jax.jit(prefill_step,
+                       in_shardings=(param_sh, NamedSharding(mesh, P(ba))),
+                       out_shardings=NamedSharding(mesh, P(ba)))
+        return step.lower(abstract_params(api.init_specs()),
+                          train_batch_specs(cfg, shape))
+    # decode
+    from ..models.spec import abstract_params
+    from ..serve.step import make_serve_step
+
+    tokens, caches = decode_specs(api, shape, page_tokens)
+    step, _, _ = make_serve_step(api, mesh, caches, variant=serve_impl)
+    return step.lower(abstract_params(api.init_specs()), tokens, caches)
+
+
+def measure_cell(cfg, shape, mesh, *, serve_impl: str, page_tokens: int,
+                 microbatches: int = 1, serve_dtype: str = "f32"):
+    """Two-point unrolled lowering -> extrapolated per-chip roofline terms."""
+    points = {}
+    for mult in (1, 2):
+        small = _scaled_cfg(cfg, mult)
+        with unroll_scans():
+            lowered = build_lowered(small, shape, mesh, serve_impl=serve_impl,
+                                    page_tokens=page_tokens,
+                                    microbatches=microbatches,
+                                    serve_dtype=serve_dtype)
+            compiled = lowered.compile()
+        ca = compiled.cost_analysis() or {}
+        coll = analyze_collectives(compiled.as_text())
+        points[mult] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "wire": coll.total_wire_bytes,
+            "wire_by_kind": dict(coll.wire_bytes),
+            "counts": dict(coll.counts),
+        }
+    n = _n_groups(cfg)
+
+    def extrapolate(key):
+        f1, f2 = points[1][key], points[2][key]
+        return f1 + (f2 - f1) * (n - 1)
+
+    wire_by_kind = {
+        k: points[1]["wire_by_kind"].get(k, 0.0)
+        + (points[2]["wire_by_kind"].get(k, 0.0)
+           - points[1]["wire_by_kind"].get(k, 0.0)) * (n - 1)
+        for k in set(points[1]["wire_by_kind"]) | set(points[2]["wire_by_kind"])
+    }
+    return {
+        "flops_per_chip": extrapolate("flops"),
+        "hbm_bytes_per_chip": extrapolate("bytes"),
+        "wire_bytes_per_chip": extrapolate("wire"),
+        "wire_by_kind": wire_by_kind,
+        "points": points,
+        "n_groups": n,
+    }
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               serve_impl: str = "gspmd", page_tokens: int = 128,
+               microbatches: int = 1, remat=None, measure: bool = False,
+               serve_dtype: str = "f32", compress: bool = False):
+    """Lower + compile one cell; returns (record dict, compiled)."""
+    cfg = get_config(arch)
+    if remat is not None:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    shape = SHAPE_BY_NAME[shape_name]
+    if shape not in shapes_for(cfg):
+        raise ValueError(f"{arch} skips {shape_name} (see DESIGN.md §6)")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    record = {"arch": arch, "shape": shape_name,
+              "mesh": "2x16x16" if multi_pod else "16x16",
+              "kind": shape.kind, "serve_impl": serve_impl}
+
+    with jax.set_mesh(mesh):
+        t0 = time.monotonic()
+        lowered = build_lowered(cfg, shape, mesh, serve_impl=serve_impl,
+                                microbatches=microbatches,
+                                page_tokens=page_tokens, multi_pod=multi_pod,
+                                serve_dtype=serve_dtype, compress=compress)
+        t_lower = time.monotonic() - t0
+        t0 = time.monotonic()
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        coll_raw = analyze_collectives(compiled.as_text())
+        record.update({
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "raw_flops_per_chip": float(ca.get("flops", 0.0)),
+            "raw_collectives": {"counts": coll_raw.counts,
+                                "wire_bytes": coll_raw.wire_bytes},
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_bytes_est": ma.argument_size_in_bytes
+                + ma.output_size_in_bytes + ma.temp_size_in_bytes
+                - ma.alias_size_in_bytes,
+            },
+        })
+        if measure:
+            m = measure_cell(cfg, shape, mesh, serve_impl=serve_impl,
+                             page_tokens=page_tokens,
+                             microbatches=microbatches,
+                             serve_dtype=serve_dtype)
+            n_chips = 512 if multi_pod else 256
+            mf = model_flops_for(cfg, shape)
+            rf = roofline_terms(m["flops_per_chip"], m["hbm_bytes_per_chip"],
+                                m["wire_bytes_per_chip"],
+                                model_flops=(mf / n_chips) if mf else None)
+            record["measured"] = m
+            record["roofline"] = rf.as_dict()
+    return record, compiled
+
+
+def run_cells(cells, *, multi_pod: bool, serve_impl: str, out_dir: Path,
+              page_tokens: int = 128, measure: bool = False,
+              microbatches: int = 1, serve_dtype: str = "f32",
+              compress: bool = False):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    results = []
+    for arch, shape_name in cells:
+        mesh_tag = "2x16x16" if multi_pod else "16x16"
+        tag = f"{arch}__{shape_name}__{mesh_tag}"
+        if serve_impl != "gspmd":
+            tag += f"__{serve_impl}"
+        if microbatches > 1:
+            tag += f"__mb{microbatches}"
+        if serve_dtype != "f32":
+            tag += f"__{serve_dtype}"
+        path = out_dir / f"{tag}.json"
+        try:
+            record, _ = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                                   serve_impl=serve_impl,
+                                   page_tokens=page_tokens, measure=measure,
+                                   microbatches=microbatches,
+                                   serve_dtype=serve_dtype,
+                                   compress=compress)
+            record["status"] = "ok"
+            extra = ""
+            if "roofline" in record:
+                extra = (f" bottleneck={record['roofline']['bottleneck']}"
+                         f" useful={record['roofline']['useful_ratio'] and round(record['roofline']['useful_ratio'],3)}")
+            print(f"[dryrun] OK  {tag}: compile={record['compile_s']}s "
+                  f"peak_mem={record['memory']['peak_bytes_est']/2**30:.2f}GiB"
+                  + extra, flush=True)
+        except Exception as e:  # record failures; the dry-run must be green
+            record = {"arch": arch, "shape": shape_name, "status": "fail",
+                      "mesh": mesh_tag, "error": f"{type(e).__name__}: {e}",
+                      "traceback": traceback.format_exc()[-2000:]}
+            print(f"[dryrun] FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+        path.write_text(json.dumps(record, indent=2, default=str))
+        results.append(record)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=[s.name for s in ALL_SHAPES])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--measure", action="store_true",
+                    help="derive roofline terms via 2-point unrolled lowering")
+    ap.add_argument("--serve-impl", default="gspmd",
+                    choices=["gspmd", "shard_map"])
+    ap.add_argument("--page-tokens", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--serve-dtype", default="f32", choices=["f32", "bf16"])
+    ap.add_argument("--compress", action="store_true",
+                    help="int8 pod-axis gradient compression (opt-in)")
+    ap.add_argument("--out", default="runs/dryrun")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = [(a, s.name) for a in ARCH_IDS
+                 for s in shapes_for(get_config(a))]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    results = run_cells(cells, multi_pod=args.multi_pod,
+                        serve_impl=args.serve_impl, out_dir=Path(args.out),
+                        page_tokens=args.page_tokens, measure=args.measure,
+                        microbatches=args.microbatches,
+                        serve_dtype=args.serve_dtype, compress=args.compress)
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    print(f"[dryrun] {n_ok}/{len(results)} cells OK")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,163 @@
+"""Post-partitioning HLO analysis: collective wire bytes + roofline terms.
+
+``compiled.cost_analysis()`` gives FLOPs and HBM bytes but not collective
+traffic, so we parse ``compiled.as_text()`` (the per-partition optimized
+HLO) and price every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute with ring-algorithm wire costs.
+
+Shapes in the per-partition module are *per-device*, so all derived terms
+are per-chip — exactly what the roofline normalization needs.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from ..core.pmem import (TPU_HBM_BW, TPU_ICI_BW, TPU_PEAK_FLOPS_BF16)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e5m2": 1, "f8e4m3fn": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    wire_bytes: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+def _parse_shapes(text: str) -> int:
+    """Total bytes of all array shapes in a result signature."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _wire_cost(kind: str, result_bytes: int, n: int) -> float:
+    """Ring-algorithm wire bytes per device."""
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n * result_bytes
+    if kind == "all-gather":
+        return (n - 1) / n * result_bytes          # result = gathered
+    if kind == "reduce-scatter":
+        return (n - 1) * result_bytes              # result = scattered shard
+    if kind == "all-to-all":
+        return (n - 1) / n * result_bytes
+    if kind == "collective-permute":
+        return float(result_bytes)
+    return 0.0
+
+
+def analyze_collectives(hlo_text: str, default_group: int = 1) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        lhs, _, rhs = line.partition("=")
+        rhs = rhs.strip()
+        for kind in COLLECTIVE_KINDS:
+            # count `kind(` and `kind-start(`; skip `-done` (same transfer)
+            m = re.search(rf"\b{kind}(-start)?\(", rhs)
+            if not m:
+                continue
+            if f"{kind}-done" in rhs:
+                continue
+            # result type annotation sits between '=' and the op name
+            result_bytes = _parse_shapes(rhs[: m.start()])
+            n = _group_size(rhs, default_group)
+            stats.counts[kind] = stats.counts.get(kind, 0) + 1
+            stats.wire_bytes[kind] = stats.wire_bytes.get(kind, 0.0) + \
+                _wire_cost(kind, result_bytes, n)
+            break
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: Optional[float] = None
+    useful_ratio: Optional[float] = None
+
+    def as_dict(self) -> Dict:
+        return dict(self.__dict__)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, wire_bytes: float,
+                   model_flops: Optional[float] = None,
+                   ici_links: int = 4) -> Roofline:
+    """All inputs per chip.  ici_links: a v5e chip has 4 ICI links; treat
+    aggregate wire bytes as spread across them."""
+    compute_s = flops / TPU_PEAK_FLOPS_BF16
+    memory_s = hbm_bytes / TPU_HBM_BW
+    collective_s = wire_bytes / (TPU_ICI_BW * ici_links)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    useful = (model_flops / flops) if (model_flops and flops) else None
+    return Roofline(flops, hbm_bytes, wire_bytes, compute_s, memory_s,
+                    collective_s, bottleneck, model_flops, useful)
+
+
+def model_flops_for(cfg, shape) -> Optional[float]:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for training;
+    2*N*D (prefill) and 2*N_active per token (decode)."""
+    from ..models.spec import param_count
+    from ..models.registry import build_model
+
+    api = build_model(cfg)
+    n_params = param_count(api.init_specs())
+    n_active = n_params
+    if cfg.n_experts and cfg.top_k:
+        # embedding + attention + shared experts stay; routed experts scale
+        expert = 3 * cfg.n_experts * cfg.d_model * cfg.moe_d_ff * cfg.n_layers
+        active_expert = expert * cfg.top_k / cfg.n_experts
+        n_active = n_params - expert + active_expert
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,55 @@
+"""Serving driver: continuous batching over the paged KV store.
+
+  python -m repro.launch.serve --arch qwen2-1.5b --requests 12
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..configs import ARCH_IDS, get_config
+from ..models import build_model
+from ..models.spec import init_params
+from ..serve import ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2-1.5b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--page-tokens", type=int, default=16)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    api = build_model(cfg)
+    params = init_params(api.init_specs(), jax.random.PRNGKey(args.seed))
+    engine = ServingEngine(api, params, max_batch=args.max_batch,
+                           max_seq=args.max_seq, page_tokens=args.page_tokens)
+    rng = np.random.default_rng(args.seed)
+    t0 = time.monotonic()
+    for _ in range(args.requests):
+        plen = int(rng.integers(3, 20))
+        engine.submit(list(rng.integers(1, cfg.vocab, plen)),
+                      max_new_tokens=args.max_new_tokens)
+    done = engine.run_until_done()
+    dt = time.monotonic() - t0
+    total_tokens = sum(len(r.output) for r in done)
+    print(f"[serve] {len(done)} requests, {total_tokens} tokens in {dt:.2f}s "
+          f"({engine.steps} engine steps)")
+    print(f"[serve] pages relinked={engine.controller.pages_relinked} "
+          f"CoW-copied={engine.controller.pages_copied} "
+          f"pool utilization={engine.controller.utilization():.2%}")
+    for r in done[:3]:
+        print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.output}")
+
+
+if __name__ == "__main__":
+    main()

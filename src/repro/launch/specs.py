@@ -1,0 +1,73 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero allocation.  This is what makes the 314 B-parameter dry-run
+possible on a CPU host: nothing is ever materialized."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.shapes import ShapeCfg
+from ..models.config import ModelConfig
+from ..models.registry import ModelAPI, build_model
+from ..models.spec import abstract_params
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeCfg) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {}
+    if cfg.family == "encdec":
+        batch["tokens"] = sds((B, S), jnp.int32)
+        batch["targets"] = sds((B, S), jnp.int32)
+        batch["frames"] = sds((B, cfg.enc_frames, cfg.d_model), jnp.float32)
+    elif cfg.family == "vlm":
+        text = S - cfg.n_patch_tokens
+        batch["tokens"] = sds((B, text), jnp.int32)
+        batch["targets"] = sds((B, text), jnp.int32)
+        batch["patch_embeds"] = sds((B, cfg.n_patch_tokens, cfg.d_model),
+                                    jnp.float32)
+    else:
+        batch["tokens"] = sds((B, S), jnp.int32)
+        batch["targets"] = sds((B, S), jnp.int32)
+    return batch
+
+
+def decode_specs(api: ModelAPI, shape: ShapeCfg,
+                 page_tokens: int = 128) -> Tuple[Any, Any]:
+    """(tokens, caches) stand-ins for serve_step: one new token against a
+    seq_len-deep KV cache/state."""
+    cfg = api.cfg
+    B, S = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(
+        lambda: api.init_caches(B, S, page_tokens))
+    # the dry run lowers the steady state: caches at depth S-1
+    tokens = sds((B, 1), jnp.int32)
+    return tokens, caches
+
+
+def abstract_state(api: ModelAPI) -> Dict[str, Any]:
+    """Abstract train state {params, opt} matching make_train_step."""
+    params = abstract_params(api.init_specs())
+    f32_like = jax.tree.map(lambda s: sds(s.shape, jnp.float32), params)
+    return {"params": params,
+            "opt": {"mu": f32_like, "nu": f32_like,
+                    "step": sds((), jnp.int32)}}
+
+
+def input_specs(arch_cfg: ModelConfig, shape: ShapeCfg) -> Dict[str, Any]:
+    """The public helper named in the assignment: all input stand-ins for
+    one (arch x shape) cell."""
+    api = build_model(arch_cfg)
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(arch_cfg, shape),
+                "state": abstract_state(api)}
+    if shape.kind == "prefill":
+        return {"batch": train_batch_specs(arch_cfg, shape)}
+    tokens, caches = decode_specs(api, shape)
+    return {"tokens": tokens, "caches": caches}

@@ -1,0 +1,8 @@
+"""Pure-JAX model zoo: decoder-only LMs (dense / MoE / MLA / SSM / hybrid),
+whisper-style enc-dec, and VLM-stub backbones, with ParamSpec-declared
+parameters, grouped scan-over-layers, and paged-KV decode paths."""
+
+from .config import ModelConfig
+from .registry import ModelAPI, build_model
+from .spec import (ParamSpec, abstract_params, init_params, named_shardings,
+                   param_count, partition_specs)

@@ -1,0 +1,253 @@
+"""Attention layers: GQA (+bias, sliding window, softcap) and MLA.
+
+Each layer kind provides:
+  * ``init``    -> ParamSpec tree (stackable across layers)
+  * ``train``   -> full-sequence causal forward (also used for prefill)
+  * ``decode``  -> single-token step over the paged KV pool
+                   (kernels.paged_attention + kernels.kv_append)
+
+Logical axes used for sharding rules: "embed" (d_model), "heads" (q heads x
+head_dim), "kv" (kv heads x head_dim), "mla_rank" (latent), "vocab".
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import attention as attention_op
+from ..kernels import kv_append, paged_attention
+from .config import ModelConfig
+from .spec import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               rot_dims: Optional[int] = None) -> jnp.ndarray:
+    """x: [B, S, H, D]; positions: [B, S].  Rotates the first rot_dims dims
+    (default all) pairwise (GPT-NeoX / llama convention)."""
+    B, S, H, D = x.shape
+    d = rot_dims or D
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq      # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:d].astype(jnp.float32)
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([rx1, rx2], axis=-1).astype(x.dtype)
+    if d < D:
+        out = jnp.concatenate([out, x[..., d:]], axis=-1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(cfg: ModelConfig) -> Dict:
+    D, hd = cfg.d_model, cfg.head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    p = {
+        "wq": ParamSpec((D, H * hd), ("embed", "heads"), cfg.param_dtype),
+        "wk": ParamSpec((D, KV * hd), ("embed", "kv"), cfg.param_dtype),
+        "wv": ParamSpec((D, KV * hd), ("embed", "kv"), cfg.param_dtype),
+        "wo": ParamSpec((H * hd, D), ("heads", "embed"), cfg.param_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ParamSpec((H * hd,), ("heads",), cfg.param_dtype, init="zeros")
+        p["bk"] = ParamSpec((KV * hd,), ("kv",), cfg.param_dtype, init="zeros")
+        p["bv"] = ParamSpec((KV * hd,), ("kv",), cfg.param_dtype, init="zeros")
+    return p
+
+
+def _qkv(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+         positions: Optional[jnp.ndarray], use_rope: bool = True):
+    B, S, D = x.shape
+    hd, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    dt = cfg.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, H, hd)
+    k = (x @ p["wk"].astype(dt)).reshape(B, S, KV, hd)
+    v = (x @ p["wv"].astype(dt)).reshape(B, S, KV, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt).reshape(H, hd)
+        k = k + p["bk"].astype(dt).reshape(KV, hd)
+        v = v + p["bv"].astype(dt).reshape(KV, hd)
+    if use_rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_train(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+              positions: jnp.ndarray, *, window: Optional[int] = None,
+              causal: bool = True, use_rope: bool = True,
+              kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+              return_kv: bool = False):
+    """Full-sequence attention.  ``kv_override`` supplies external K/V
+    (cross-attention).  Returns (out, (k, v) if return_kv)."""
+    q, k, v = _qkv(p, cfg, x, positions if use_rope else None, use_rope)
+    if kv_override is not None:
+        k, v = kv_override
+        causal = False
+    out = attention_op(q, k, v, causal=causal, window=window,
+                       softcap=cfg.attn_logit_softcap)
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    out = out @ p["wo"].astype(cfg.dtype)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def gqa_cross(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+              k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Cross-attention: queries from x, K/V precomputed from the encoder.
+    Only q and the output projection are evaluated here (no wasted self-K/V
+    matmuls)."""
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    dt = cfg.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, H, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt).reshape(H, hd)
+    out = attention_op(q, k, v, causal=False, softcap=cfg.attn_logit_softcap)
+    return out.reshape(B, S, H * hd) @ p["wo"].astype(dt)
+
+
+def cross_kv(p: Dict, cfg: ModelConfig, enc_out: jnp.ndarray):
+    """Per-layer cross K/V from encoder output (computed once per request)."""
+    B, Se, _ = enc_out.shape
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.dtype
+    k = (enc_out @ p["wk"].astype(dt)).reshape(B, Se, kv, hd)
+    v = (enc_out @ p["wv"].astype(dt)).reshape(B, Se, kv, hd)
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(dt).reshape(kv, hd)
+        v = v + p["bv"].astype(dt).reshape(kv, hd)
+    return k, v
+
+
+def gqa_decode(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+               pool_k: jnp.ndarray, pool_v: jnp.ndarray,
+               page_table: jnp.ndarray, lengths: jnp.ndarray,
+               *, window: Optional[int] = None, use_rope: bool = True):
+    """One-token decode: append this token's K/V into the staging page, then
+    attend through the page table.  x: [B, 1, D].  Returns
+    (out [B, 1, D], new_pool_k, new_pool_v)."""
+    B = x.shape[0]
+    T = pool_k.shape[1]
+    positions = lengths[:, None]                        # [B, 1]
+    q, k, v = _qkv(p, cfg, x, positions if use_rope else None, use_rope)
+    page_ids = jax.vmap(lambda row, l: row[l // T])(page_table, lengths)
+    slot_ids = lengths % T
+    pool_k = kv_append(pool_k, k[:, 0], page_ids, slot_ids)
+    pool_v = kv_append(pool_v, v[:, 0], page_ids, slot_ids)
+    out = paged_attention(q[:, 0], pool_k, pool_v, page_table, lengths + 1,
+                          window=window, softcap=cfg.attn_logit_softcap)
+    out = out[:, None]                                   # [B, 1, H, hd]
+    out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim) @ p["wo"].astype(cfg.dtype)
+    return out, pool_k, pool_v
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2): latent-compressed KV cache
+# ---------------------------------------------------------------------------
+
+
+def mla_init(cfg: ModelConfig) -> Dict:
+    D = cfg.d_model
+    H = cfg.n_heads
+    R = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    pd = cfg.param_dtype
+    return {
+        "wq": ParamSpec((D, H * (dn + dr)), ("embed", "heads"), pd),
+        "w_dkv": ParamSpec((D, R + dr), ("embed", "mla_rank"), pd),
+        "w_uk": ParamSpec((R, H * dn), ("mla_rank", "heads"), pd),
+        "w_uv": ParamSpec((R, H * dv), ("mla_rank", "heads"), pd),
+        "wo": ParamSpec((H * dv, D), ("heads", "embed"), pd),
+    }
+
+
+def _mla_qkv(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+             positions: jnp.ndarray):
+    """Returns q_nope, q_rope, c_kv (latent), k_rope (shared across heads)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    R = cfg.kv_lora_rank
+    dt = cfg.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv_full = x @ p["w_dkv"].astype(dt)                 # [B, S, R + dr]
+    c_kv, k_rope = ckv_full[..., :R], ckv_full[..., R:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_train(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+              positions: jnp.ndarray):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    R = cfg.kv_lora_rank
+    dt = cfg.dtype
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    k_nope = (c_kv @ p["w_uk"].astype(dt)).reshape(B, S, H, dn)
+    v = (c_kv @ p["w_uv"].astype(dt)).reshape(B, S, H, dv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))],
+                        axis=-1)
+    out = attention_op(q, k, v, causal=True, softcap=cfg.attn_logit_softcap)
+    out = out.reshape(B, S, H * dv) @ p["wo"].astype(dt)
+    return out
+
+
+def mla_decode(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+               pool_ckv: jnp.ndarray, page_table: jnp.ndarray,
+               lengths: jnp.ndarray):
+    """Latent-space paged decode: the pool stores c_kv ++ k_rope
+    ([P, T, 1, R+dr]) — 576 floats/token instead of H*(dn+dv)=4096: the
+    most storage-efficient cell (DESIGN.md §6).
+
+    Attention is evaluated in latent space by absorbing w_uk into q
+    (the standard MLA inference identity):  score = <q_nope W_uk^T, c_kv>.
+    """
+    B = x.shape[0]
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    R = cfg.kv_lora_rank
+    dt = cfg.dtype
+    T = pool_ckv.shape[1]
+    positions = lengths[:, None]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    new_lat = jnp.concatenate([c_kv, k_rope], axis=-1)[:, 0][:, None, :]  # [B,1,R+dr]
+    page_ids = jax.vmap(lambda row, l: row[l // T])(page_table, lengths)
+    slot_ids = lengths % T
+    pool_ckv = kv_append(pool_ckv, new_lat, page_ids, slot_ids)
+
+    # absorb: q_lat[h] = q_nope[h] @ w_uk[:, h]^T  -> [B, H, R]
+    w_uk = p["w_uk"].astype(dt).reshape(R, H, dn)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)
+    q_full = jnp.concatenate([q_lat, q_rope[:, 0]], axis=-1)  # [B, H, R+dr]
+    # paged_attention scales by (R+dr)^-0.5; true MLA scale is (dn+dr)^-0.5
+    q_full = q_full * ((R + dr) ** 0.5 / (dn + dr) ** 0.5)
+    # keys are the latents themselves (+ shared rope part); values = latents
+    lat = paged_attention(q_full, pool_ckv, pool_ckv, page_table, lengths + 1)
+    lat = lat[..., :R]                                        # [B, H, R]
+    w_uv = p["w_uv"].astype(dt).reshape(R, H, dv)
+    out = jnp.einsum("bhr,rhd->bhd", lat, w_uv)
+    out = out.reshape(B, 1, H * dv) @ p["wo"].astype(dt)
+    return out, pool_ckv

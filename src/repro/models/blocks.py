@@ -1,0 +1,124 @@
+"""Decoder blocks: attention (dense/MoE/MLA), recurrent (RG-LRU), SSD.
+
+A *block* is one temporal-mixing layer + (for attention/recurrent kinds)
+one channel-mixing layer, pre-norm residual.  Blocks expose init/train/
+decode with a uniform cache protocol so lm.py can scan over heterogeneous
+layer patterns (hybrid archs) with stacked parameters.
+
+Cache protocol per kind:
+  attn    (pool_k, pool_v)  paged pools        (or (pool_ckv,) for MLA)
+  rec     {"conv", "h"}     RG-LRU state
+  ssm     {"conv", "ssd"}   Mamba2 state
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from .attention import (gqa_decode, gqa_init, gqa_train, mla_decode, mla_init,
+                        mla_train)
+from .config import ModelConfig
+from .shardctx import constrain_batch
+from .layers import (moe_apply, moe_init, mlp_apply, mlp_init, norm_apply,
+                     norm_init)
+from .ssm import (mamba2_decode, mamba2_init, mamba2_init_state, mamba2_train,
+                  rglru_decode, rglru_init, rglru_init_state, rglru_train)
+
+
+def block_init(cfg: ModelConfig, kind: str) -> Dict:
+    if kind == "attn":
+        p = {"norm1": norm_init(cfg), "norm2": norm_init(cfg)}
+        p["attn"] = mla_init(cfg) if cfg.mla else gqa_init(cfg)
+        if cfg.n_experts:
+            p["moe"] = moe_init(cfg)
+        else:
+            p["mlp"] = mlp_init(cfg)
+        return p
+    if kind == "rec":
+        return {"norm1": norm_init(cfg), "rec": rglru_init(cfg),
+                "norm2": norm_init(cfg), "mlp": mlp_init(cfg)}
+    if kind == "ssm":
+        return {"norm1": norm_init(cfg), "ssm": mamba2_init(cfg)}
+    raise ValueError(kind)
+
+
+def block_train(p: Dict, cfg: ModelConfig, kind: str, x: jnp.ndarray,
+                positions: jnp.ndarray) -> jnp.ndarray:
+    if kind == "attn":
+        h = norm_apply(p["norm1"], cfg, x)
+        if cfg.mla:
+            h = mla_train(p["attn"], cfg, h, positions)
+        else:
+            h = gqa_train(p["attn"], cfg, h, positions,
+                          window=cfg.attn_window,
+                          use_rope=cfg.rope_theta is not None)
+        x = constrain_batch(x + h)
+        h = norm_apply(p["norm2"], cfg, x)
+        h = moe_apply(p["moe"], cfg, h) if cfg.n_experts else mlp_apply(p["mlp"], cfg, h)
+        return constrain_batch(x + h)
+    if kind == "rec":
+        h = norm_apply(p["norm1"], cfg, x)
+        x = constrain_batch(x + rglru_train(p["rec"], cfg, h))
+        h = norm_apply(p["norm2"], cfg, x)
+        return constrain_batch(x + mlp_apply(p["mlp"], cfg, h))
+    if kind == "ssm":
+        h = norm_apply(p["norm1"], cfg, x)
+        return constrain_batch(x + mamba2_train(p["ssm"], cfg, h))
+    raise ValueError(kind)
+
+
+def block_decode(p: Dict, cfg: ModelConfig, kind: str, x: jnp.ndarray,
+                 cache, page_table: Optional[jnp.ndarray],
+                 lengths: jnp.ndarray):
+    """x: [B, 1, D]. Returns (x, new_cache)."""
+    if kind == "attn":
+        h = norm_apply(p["norm1"], cfg, x)
+        if cfg.mla:
+            (pool_ckv,) = cache
+            h, pool_ckv = mla_decode(p["attn"], cfg, h, pool_ckv, page_table,
+                                     lengths)
+            new_cache = (pool_ckv,)
+        else:
+            pool_k, pool_v = cache
+            h, pool_k, pool_v = gqa_decode(p["attn"], cfg, h, pool_k, pool_v,
+                                           page_table, lengths,
+                                           window=cfg.attn_window,
+                                           use_rope=cfg.rope_theta is not None)
+            new_cache = (pool_k, pool_v)
+        x = x + h
+        h = norm_apply(p["norm2"], cfg, x)
+        h = moe_apply(p["moe"], cfg, h) if cfg.n_experts else mlp_apply(p["mlp"], cfg, h)
+        return x + h, new_cache
+    if kind == "rec":
+        h = norm_apply(p["norm1"], cfg, x)
+        h, state = rglru_decode(p["rec"], cfg, h, cache)
+        x = x + h
+        h = norm_apply(p["norm2"], cfg, x)
+        return x + mlp_apply(p["mlp"], cfg, h), state
+    if kind == "ssm":
+        h = norm_apply(p["norm1"], cfg, x)
+        h, state = mamba2_decode(p["ssm"], cfg, h, cache)
+        return x + h, state
+    raise ValueError(kind)
+
+
+def block_cache_init(cfg: ModelConfig, kind: str, batch: int,
+                     num_pages: int, page_tokens: int):
+    """Zeroed decode cache for one block (pools for attn, state otherwise)."""
+    if kind == "attn":
+        if cfg.mla:
+            lat = cfg.kv_lora_rank + cfg.qk_rope_dim
+            return (jnp.zeros((num_pages, page_tokens, 1, lat), cfg.dtype),)
+        return (
+            jnp.zeros((num_pages, page_tokens, cfg.n_kv_heads, cfg.head_dim),
+                      cfg.dtype),
+            jnp.zeros((num_pages, page_tokens, cfg.n_kv_heads, cfg.head_dim),
+                      cfg.dtype),
+        )
+    if kind == "rec":
+        return rglru_init_state(cfg, batch)
+    if kind == "ssm":
+        return mamba2_init_state(cfg, batch)
+    raise ValueError(kind)

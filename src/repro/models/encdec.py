@@ -1,0 +1,189 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings [B, enc_frames, D].  Positions are
+sinusoidal (whisper uses absolute embeddings; we use the parameter-free
+form so the mechanical 32 K decode cells need no 32 K-row learned table —
+noted in DESIGN.md).
+
+Decoder blocks: causal self-attention (paged at decode) + cross-attention
+over the encoder output (computed once per request, cached read-only — the
+relinked-from-prefill-staging analogue) + GELU MLP, LayerNorm + biases.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import cross_kv, gqa_cross, gqa_decode, gqa_init, gqa_train
+from .blocks import block_cache_init
+from .config import ModelConfig
+from .layers import mlp_apply, mlp_init, norm_apply, norm_init
+from .shardctx import constrain_batch
+from ..scan_util import maybe_scan
+from .spec import ParamSpec, tree_map_specs
+
+
+def sinusoid_positions(S: int, D: int, offset=0) -> jnp.ndarray:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None] + offset
+    dim = jnp.arange(D // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / D)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _stack(tree: Any, n: int) -> Any:
+    return tree_map_specs(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.logical, s.dtype,
+                            s.init, s.scale), tree)
+
+
+# ---------------------------------------------------------------------------
+
+
+def encdec_init(cfg: ModelConfig) -> Dict:
+    enc_block = {"norm1": norm_init(cfg), "attn": gqa_init(cfg),
+                 "norm2": norm_init(cfg), "mlp": mlp_init(cfg)}
+    dec_block = {"norm1": norm_init(cfg), "self_attn": gqa_init(cfg),
+                 "norm2": norm_init(cfg), "cross_attn": gqa_init(cfg),
+                 "norm3": norm_init(cfg), "mlp": mlp_init(cfg)}
+    return {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed_tbl"),
+                           cfg.param_dtype, init="embed", scale=0.02),
+        "encoder": _stack(enc_block, cfg.n_enc_layers),
+        "enc_norm": norm_init(cfg),
+        "decoder": _stack(dec_block, cfg.n_dec_layers),
+        "final_norm": norm_init(cfg),
+    }
+
+
+def encode(params: Dict, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: [B, Senc, D] stub embeddings -> encoder hidden states."""
+    B, S, D = frames.shape
+    x = frames.astype(cfg.dtype) + sinusoid_positions(S, D).astype(cfg.dtype)
+
+    def layer(h, p):
+        a = norm_apply(p["norm1"], cfg, h)
+        h = h + gqa_train(p["attn"], cfg, a, positions=None, causal=False,
+                          use_rope=False)
+        a = norm_apply(p["norm2"], cfg, h)
+        return constrain_batch(h + mlp_apply(p["mlp"], cfg, a)), None
+
+    if cfg.remat == "full":
+        layer = jax.checkpoint(layer,
+                               policy=jax.checkpoint_policies.nothing_saveable)
+    x = constrain_batch(x)
+    x, _ = maybe_scan(layer, x, params["encoder"])
+    return norm_apply(params["enc_norm"], cfg, x)
+
+
+def _dec_embed(params, cfg, tokens, offset) -> jnp.ndarray:
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    S = tokens.shape[1]
+    return x + sinusoid_positions(S, cfg.d_model, offset).astype(cfg.dtype)
+
+
+def decode_train(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                 enc_out: jnp.ndarray) -> jnp.ndarray:
+    """Teacher-forced decoder -> logits [B, S, V]."""
+    x = _dec_embed(params, cfg, tokens, 0)
+
+    def layer(h, p):
+        a = norm_apply(p["norm1"], cfg, h)
+        h = h + gqa_train(p["self_attn"], cfg, a, positions=None, causal=True,
+                          use_rope=False)
+        a = norm_apply(p["norm2"], cfg, h)
+        k, v = cross_kv(p["cross_attn"], cfg, enc_out)
+        h = h + gqa_cross(p["cross_attn"], cfg, a, k, v)
+        a = norm_apply(p["norm3"], cfg, h)
+        return constrain_batch(h + mlp_apply(p["mlp"], cfg, a)), None
+
+    if cfg.remat == "full":
+        layer = jax.checkpoint(layer,
+                               policy=jax.checkpoint_policies.nothing_saveable)
+    x = constrain_batch(x)
+    x, _ = maybe_scan(layer, x, params["decoder"])
+    x = norm_apply(params["final_norm"], cfg, x)
+    return x @ params["embed"].astype(cfg.dtype).T        # tied unembed
+
+
+def encdec_loss(params: Dict, cfg: ModelConfig, frames: jnp.ndarray,
+                tokens: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    enc = encode(params, cfg, frames)
+    logits = decode_train(params, cfg, tokens, enc).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(cols == targets[..., None], logits, 0.0), axis=-1)
+    return (logz - gold).mean()
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def encdec_init_caches(cfg: ModelConfig, batch: int, max_seq: int,
+                       page_tokens: int = 128) -> Dict:
+    pages_per_seq = -(-max_seq // page_tokens)
+    num_pages = batch * pages_per_seq
+    one = block_cache_init(cfg, "attn", batch, num_pages, page_tokens)
+    # drop the mlp/moe part of the generic cache: we only need pools
+    pools = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_dec_layers,) + a.shape), one)
+    return {
+        "page_table": jnp.arange(batch * pages_per_seq, dtype=jnp.int32)
+        .reshape(batch, pages_per_seq) % num_pages,
+        "lengths": jnp.zeros((batch,), jnp.int32),
+        "pools": pools,
+        # cross-attention K/V: [L, B, Senc, KV, hd], computed at prefill
+        "cross_k": jnp.zeros((cfg.n_dec_layers, batch, cfg.enc_frames,
+                              cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+        "cross_v": jnp.zeros((cfg.n_dec_layers, batch, cfg.enc_frames,
+                              cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+    }
+
+
+def encdec_prefill_cross(params: Dict, cfg: ModelConfig,
+                         enc_out: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Compute per-layer cross K/V once (the read-only relinked file)."""
+
+    def layer(_, p):
+        return None, cross_kv(p["cross_attn"], cfg, enc_out)
+
+    _, (ks, vs) = jax.lax.scan(layer, None, params["decoder"])
+    return ks, vs
+
+
+def encdec_decode_step(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                       caches: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """tokens [B, 1] -> (logits, caches)."""
+    page_table = caches["page_table"]
+    lengths = caches["lengths"]
+    # per-sequence sinusoidal position at the current length
+    D = cfg.d_model
+    dim = jnp.arange(D // 2, dtype=jnp.float32)[None, None, :]
+    ang = lengths[:, None, None].astype(jnp.float32) / jnp.power(
+        10000.0, 2 * dim / D)
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    x = params["embed"].astype(cfg.dtype)[tokens] + pe.astype(cfg.dtype)
+
+    def layer(h, xs):
+        p, (pool_k, pool_v), ck, cv = xs
+        a = norm_apply(p["norm1"], cfg, h)
+        a, pool_k, pool_v = gqa_decode(p["self_attn"], cfg, a, pool_k, pool_v,
+                                       page_table, lengths, use_rope=False)
+        h = h + a
+        a = norm_apply(p["norm2"], cfg, h)
+        h = h + gqa_cross(p["cross_attn"], cfg, a, ck, cv)
+        a = norm_apply(p["norm3"], cfg, h)
+        return h + mlp_apply(p["mlp"], cfg, a), (pool_k, pool_v)
+
+    x, new_pools = maybe_scan(
+        layer, x,
+        (params["decoder"], caches["pools"], caches["cross_k"], caches["cross_v"]))
+    x = norm_apply(params["final_norm"], cfg, x)
+    logits = x @ params["embed"].astype(cfg.dtype).T
+    return logits, {**caches, "pools": new_pools, "lengths": lengths + 1}

@@ -1,0 +1,191 @@
+"""Norms, MLP variants, and MoE (token-choice top-k with shared experts)."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .shardctx import constrain_dim_model, constrain_moe_buffer
+from .spec import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_init(cfg: ModelConfig, d: Optional[int] = None) -> Dict:
+    d = d or cfg.d_model
+    p = {"w": ParamSpec((d,), ("embed",), cfg.param_dtype, init="ones")}
+    if cfg.norm == "layernorm":
+        p["b"] = ParamSpec((d,), ("embed",), cfg.param_dtype, init="zeros")
+    return p
+
+
+def norm_apply(p: Dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        out = out * p["w"].astype(jnp.float32) + p["b"].astype(jnp.float32)
+    else:  # rmsnorm
+        var = (xf ** 2).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + 1e-6) * p["w"].astype(jnp.float32)
+    return out.astype(cfg.dtype)
+
+
+def rmsnorm_gated(x: jnp.ndarray, gate: jnp.ndarray, w: jnp.ndarray,
+                  dtype) -> jnp.ndarray:
+    """Mamba2's gated RMSNorm: norm(x * silu(gate)) * w."""
+    xf = (x * jax.nn.silu(gate.astype(jnp.float32))).astype(jnp.float32)
+    var = (xf ** 2).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + 1e-6) * w.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    pd = cfg.param_dtype
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "wi_gate": ParamSpec((D, F), ("embed", "ffn"), pd),
+            "wi_up": ParamSpec((D, F), ("embed", "ffn"), pd),
+            "wo": ParamSpec((F, D), ("ffn", "embed"), pd),
+        }
+    p = {
+        "wi": ParamSpec((D, F), ("embed", "ffn"), pd),
+        "wo": ParamSpec((F, D), ("ffn", "embed"), pd),
+    }
+    if cfg.norm == "layernorm":  # bias-ful families (whisper, starcoder2)
+        p["bi"] = ParamSpec((F,), ("ffn",), pd, init="zeros")
+        p["bo"] = ParamSpec((D,), ("embed",), pd, init="zeros")
+    return p
+
+
+def mlp_apply(p: Dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    dt = cfg.dtype
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["wi_gate"].astype(dt)) * (x @ p["wi_up"].astype(dt))
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(x @ p["wi_gate"].astype(dt)) * (x @ p["wi_up"].astype(dt))
+    elif cfg.mlp == "gelu":
+        h = x @ p["wi"].astype(dt)
+        if "bi" in p:
+            h = h + p["bi"].astype(dt)
+        h = jax.nn.gelu(h)
+    elif cfg.mlp == "relu2":
+        h = jax.nn.relu(x @ p["wi"].astype(dt)) ** 2
+    else:
+        raise ValueError(cfg.mlp)
+    out = h @ p["wo"].astype(dt)
+    if "bo" in p:
+        out = out + p["bo"].astype(dt)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MoE: token-choice top-k, scatter-based dispatch (no one-hot einsum blowup)
+# ---------------------------------------------------------------------------
+
+
+def moe_init(cfg: ModelConfig) -> Dict:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    pd = cfg.param_dtype
+    p = {
+        "router": ParamSpec((D, E), ("embed", None), pd, scale=0.02),
+        "wi_gate": ParamSpec((E, D, F), ("expert", "embed", "ffn"), pd),
+        "wi_up": ParamSpec((E, D, F), ("expert", "embed", "ffn"), pd),
+        "wo": ParamSpec((E, F, D), ("expert", "ffn", "embed"), pd),
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.n_shared_experts * cfg.moe_d_ff
+        p["shared"] = {
+            "wi_gate": ParamSpec((D, Fs), ("embed", "ffn"), pd),
+            "wi_up": ParamSpec((D, Fs), ("embed", "ffn"), pd),
+            "wo": ParamSpec((Fs, D), ("ffn", "embed"), pd),
+        }
+    return p
+
+
+def moe_apply(p: Dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Fixed-capacity token-choice routing.
+
+    Dispatch/combine are index scatters/gathers (O(T*k*D) data movement)
+    rather than GShard's [T, E, C] one-hot einsums (O(T*E*C*D) FLOPs) — on
+    TPU the scatter lowers to dynamic-update-slice loops that GSPMD can
+    shard over the expert axis, keeping compiled FLOPs matmul-dominated.
+    Overflowed tokens (beyond an expert's capacity) are dropped — their
+    combine weight is zero — matching capacity-factor MoE training practice.
+    """
+    B, S, D = x.shape
+    E, K, F = cfg.n_experts, cfg.top_k, cfg.moe_d_ff
+    dt = cfg.dtype
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = (xt @ p["router"].astype(dt)).astype(jnp.float32)   # [T, E]
+    weights, experts = jax.lax.top_k(logits, K)                   # [T, K]
+    weights = jax.nn.softmax(weights, axis=-1)
+
+    # capacity factor 2.0 at scale; tiny token counts (decode steps, smoke
+    # tests) get exact capacity so no token ever drops — serving must be
+    # deterministic w.r.t. batch composition
+    capacity = T * K if T * K <= 4 * E else max(1, int(2 * T * K // E))
+
+    flat_expert = experts.reshape(-1)                             # [T*K]
+    # position of each (token, k) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)      # [T*K, E]
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - onehot)         # exclusive
+    pos = jnp.take_along_axis(pos_in_expert, flat_expert[:, None], axis=1)[:, 0]
+    keep = pos < capacity
+    slot = jnp.where(keep, flat_expert * capacity + pos, E * capacity)
+
+    # dispatch: [E*capacity + 1 overflow row, D]
+    buf = jnp.zeros((E * capacity + 1, D), dt)
+    tok_idx = jnp.repeat(jnp.arange(T), K)
+    buf = buf.at[slot].set(xt[tok_idx], mode="drop")
+    # pin the expert dim to the TP axis (expert parallelism): without this
+    # the scatter output is unannotated and GSPMD REPLICATES the expert
+    # einsums on every chip (~100x FLOPs at 64e, EXPERIMENTS.md §Perf)
+    hidden = constrain_moe_buffer(
+        buf[: E * capacity].reshape(E, capacity, D))
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", hidden, p["wi_gate"].astype(dt)))
+    h = h * jnp.einsum("ecd,edf->ecf", hidden, p["wi_up"].astype(dt))
+    out_e = constrain_moe_buffer(
+        jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt)))
+    out_flat = jnp.concatenate(
+        [out_e.reshape(E * capacity, D), jnp.zeros((1, D), dt)], axis=0)
+
+    # combine: gather each (token, k) slot's output, weight, and sum over k
+    gathered = out_flat[slot].reshape(T, K, D)
+    w = (weights * keep.reshape(T, K)).astype(dt)
+    out = jnp.einsum("tkd,tk->td", gathered, w)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        h = jax.nn.silu(xt @ sp["wi_gate"].astype(dt)) * (xt @ sp["wi_up"].astype(dt))
+        out = out + h @ sp["wo"].astype(dt)
+    return out.reshape(B, S, D)
+
+
+def moe_aux_loss(p: Dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Load-balance auxiliary loss (Switch-style fraction*prob)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    xt = x.reshape(-1, D)
+    logits = (xt @ p["router"].astype(cfg.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, experts = jax.lax.top_k(logits, K)
+    counts = jnp.zeros((E,), jnp.float32).at[experts.reshape(-1)].add(1.0)
+    frac = counts / counts.sum()
+    return E * jnp.sum(frac * probs.mean(0))

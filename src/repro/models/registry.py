@@ -1,0 +1,76 @@
+"""Uniform model API over the three structural families (decoder-only LM,
+encoder-decoder, VLM-stub LM).  Everything downstream (train_step builder,
+serving engine, dry-run) talks to this interface only."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax.numpy as jnp
+
+from . import encdec as ed
+from . import lm
+from .config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init_specs: Callable[[], Any]
+    loss: Callable[..., jnp.ndarray]           # (params, batch) -> scalar
+    logits: Callable[..., jnp.ndarray]         # (params, batch) -> [B, S, V]
+    init_caches: Callable[..., Dict]           # (batch, max_seq, page_tokens)
+    decode_step: Callable[..., Any]            # (params, tokens, caches)
+
+
+def build_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family == "encdec":
+        return ModelAPI(
+            cfg=cfg,
+            init_specs=lambda: ed.encdec_init(cfg),
+            loss=lambda p, b: ed.encdec_loss(p, cfg, b["frames"], b["tokens"],
+                                             b["targets"]),
+            logits=lambda p, b: ed.decode_train(p, cfg, b["tokens"],
+                                                ed.encode(p, cfg, b["frames"])),
+            init_caches=lambda batch, max_seq, page_tokens=128:
+                ed.encdec_init_caches(cfg, batch, max_seq, page_tokens),
+            decode_step=lambda p, t, c: ed.encdec_decode_step(p, cfg, t, c),
+        )
+
+    if cfg.family == "vlm":
+        def loss(p, b):
+            # patch embeddings occupy the first n_patch positions; loss is
+            # computed on the text tail only (prefix targets are ignored by
+            # slicing the logits)
+            logits_all = lm.lm_logits(p, cfg, b["tokens"],
+                                      prefix_embeds=b["patch_embeds"])
+            logits_txt = logits_all[:, cfg.n_patch_tokens:, :].astype(jnp.float32)
+            import jax
+            logz = jax.nn.logsumexp(logits_txt, axis=-1)
+            cols = jax.lax.broadcasted_iota(jnp.int32, logits_txt.shape, 2)
+            gold = jnp.sum(jnp.where(cols == b["targets"][..., None],
+                                     logits_txt, 0.0), axis=-1)
+            return (logz - gold).mean()
+
+        return ModelAPI(
+            cfg=cfg,
+            init_specs=lambda: lm.lm_init(cfg),
+            loss=loss,
+            logits=lambda p, b: lm.lm_logits(p, cfg, b["tokens"],
+                                             prefix_embeds=b["patch_embeds"]),
+            init_caches=lambda batch, max_seq, page_tokens=128:
+                lm.lm_init_caches(cfg, batch, max_seq, page_tokens),
+            decode_step=lambda p, t, c: lm.lm_decode_step(p, cfg, t, c),
+        )
+
+    # dense / moe / ssm / hybrid decoder-only LMs
+    return ModelAPI(
+        cfg=cfg,
+        init_specs=lambda: lm.lm_init(cfg),
+        loss=lambda p, b: lm.lm_loss(p, cfg, b["tokens"], b["targets"]),
+        logits=lambda p, b: lm.lm_logits(p, cfg, b["tokens"]),
+        init_caches=lambda batch, max_seq, page_tokens=128:
+            lm.lm_init_caches(cfg, batch, max_seq, page_tokens),
+        decode_step=lambda p, t, c: lm.lm_decode_step(p, cfg, t, c),
+    )

@@ -1,0 +1,133 @@
+"""Parameter specification machinery.
+
+Models declare parameters as ``ParamSpec`` leaves (shape + logical axes +
+init).  Three materializations:
+
+  * ``abstract_params``  -> jax.ShapeDtypeStruct tree (dry-run lowering;
+                            never allocates — required for the 72B configs)
+  * ``init_params``      -> concrete arrays (smoke tests, real training)
+  * ``partition_specs``  -> PartitionSpec tree from logical->mesh rules,
+                            with divisibility-checked fallback (a logical
+                            axis maps to a mesh axis only when the dim is
+                            divisible by it; otherwise it stays replicated,
+                            MaxText-style)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]       # logical axis name per dim
+    dtype: Any = jnp.float32
+    init: str = "normal"                      # normal | zeros | ones | embed
+    scale: Optional[float] = None             # stddev override
+
+    def __post_init__(self) -> None:
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(f: Callable[[ParamSpec], Any], tree: Any) -> Any:
+    return jax.tree.map(f, tree, is_leaf=is_spec)
+
+
+def abstract_params(tree: Any) -> Any:
+    return tree_map_specs(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree)
+
+
+def param_count(tree: Any) -> int:
+    total = 0
+    for s in jax.tree.leaves(tree, is_leaf=is_spec):
+        total += math.prod(s.shape)
+    return total
+
+
+def init_params(tree: Any, rng: jax.Array) -> Any:
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+
+    def one(s: ParamSpec, key: jax.Array) -> jax.Array:
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, s.dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, s.dtype)
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+        std = s.scale if s.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+        if s.init == "embed":
+            std = s.scale if s.scale is not None else 1.0
+        return (jax.random.normal(key, s.shape, jnp.float32) * std).astype(s.dtype)
+
+    return treedef.unflatten([one(s, k) for s, k in zip(leaves, keys)])
+
+
+# ---------------------------------------------------------------------------
+# logical -> mesh rules
+# ---------------------------------------------------------------------------
+
+Rules = Dict[str, Any]  # logical axis name -> mesh axis | tuple | None
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return math.prod(mesh.shape[a] for a in axis)
+    return mesh.shape[axis]
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+             rules: Rules, mesh: Mesh) -> P:
+    """Resolve one parameter's PartitionSpec. Mesh axes may be consumed only
+    once per param (GSPMD requirement); dims that do not divide evenly stay
+    replicated."""
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        axis = rules.get(name) if name is not None else None
+        if axis is None:
+            out.append(None)
+            continue
+        axes = axis if isinstance(axis, (tuple, list)) else (axis,)
+        take = []
+        span = 1
+        for a in axes:
+            if a in used:
+                continue
+            sz = mesh.shape[a]
+            if dim % (span * sz) == 0:
+                take.append(a)
+                span *= sz
+        if not take:
+            out.append(None)
+        else:
+            used.update(take)
+            out.append(tuple(take) if len(take) > 1 else take[0])
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def partition_specs(tree: Any, rules: Rules, mesh: Mesh) -> Any:
+    return tree_map_specs(lambda s: spec_for(s.shape, s.logical, rules, mesh), tree)
+
+
+def named_shardings(tree: Any, rules: Rules, mesh: Mesh) -> Any:
+    from jax.sharding import NamedSharding
+
+    return tree_map_specs(
+        lambda s: NamedSharding(mesh, spec_for(s.shape, s.logical, rules, mesh)), tree
+    )

@@ -1,0 +1,279 @@
+"""State-space layers: Mamba2 SSD and the RG-LRU (griffin) recurrent block.
+
+TPU adaptation notes (DESIGN.md §2): the SSD forward uses the *chunked
+block decomposition* — intra-chunk terms are plain matmuls (MXU) and only
+the O(S/chunk) inter-chunk recurrence is a scan — instead of the
+GPU-oriented parallel-scan-over-tokens formulation.  The RG-LRU keeps the
+token-level linear recurrence but runs it as an associative scan, which XLA
+lowers to a log-depth tree.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import rmsnorm_gated
+from ..scan_util import maybe_scan
+from .spec import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv1d (shared by both layer kinds)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, S, C]; w: [C, W]; left-padded depthwise conv + silu."""
+    W = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[None, None, :, i]
+              for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def conv_step(x_new: jnp.ndarray, conv_state: jnp.ndarray, w: jnp.ndarray,
+              b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token conv: x_new [B, C]; conv_state [B, W-1, C].
+    Returns (out [B, C], new_state)."""
+    W = w.shape[1]
+    window = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # [B,W,C]
+    out = jnp.einsum("bwc,cw->bc", window, w) + b
+    return jax.nn.silu(out), window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_dims(cfg: ModelConfig) -> Dict[str, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    ngroups = 1
+    conv_dim = d_inner + 2 * ngroups * cfg.ssm_state
+    return dict(d_inner=d_inner, nheads=nheads, ngroups=ngroups,
+                conv_dim=conv_dim, hd=cfg.ssm_head_dim, state=cfg.ssm_state)
+
+
+def mamba2_init(cfg: ModelConfig) -> Dict:
+    d = mamba2_dims(cfg)
+    D = cfg.d_model
+    pd = cfg.param_dtype
+    in_dim = 2 * d["d_inner"] + 2 * d["ngroups"] * d["state"] + d["nheads"]
+    return {
+        "in_proj": ParamSpec((D, in_dim), ("embed", "ffn"), pd),
+        "conv_w": ParamSpec((d["conv_dim"], cfg.ssm_conv), ("ffn", None), pd,
+                            scale=0.5),
+        "conv_b": ParamSpec((d["conv_dim"],), ("ffn",), pd, init="zeros"),
+        "A_log": ParamSpec((d["nheads"],), (None,), pd, init="zeros"),
+        "D_skip": ParamSpec((d["nheads"],), (None,), pd, init="ones"),
+        "dt_bias": ParamSpec((d["nheads"],), (None,), pd, init="zeros"),
+        "norm_w": ParamSpec((d["d_inner"],), ("ffn",), pd, init="ones"),
+        "out_proj": ParamSpec((d["d_inner"], D), ("ffn", "embed"), pd),
+    }
+
+
+def _mamba2_split(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    d = mamba2_dims(cfg)
+    di, ng, st, nh = d["d_inner"], d["ngroups"], d["state"], d["nheads"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + d["conv_dim"]]
+    dt = zxbcdt[..., di + d["conv_dim"]:]
+    return z, xbc, dt
+
+
+def _mamba2_xbc_split(cfg: ModelConfig, xbc: jnp.ndarray):
+    d = mamba2_dims(cfg)
+    di, ng, st = d["d_inner"], d["ngroups"], d["state"]
+    x = xbc[..., :di]
+    Bm = xbc[..., di : di + ng * st]
+    Cm = xbc[..., di + ng * st :]
+    return x, Bm, Cm
+
+
+def mamba2_train(p: Dict, cfg: ModelConfig, u: jnp.ndarray) -> jnp.ndarray:
+    """Chunked SSD forward. u: [B, S, D] -> [B, S, D]."""
+    d = mamba2_dims(cfg)
+    B_, S, _ = u.shape
+    nh, hd, st = d["nheads"], d["hd"], d["state"]
+    dt_ = cfg.dtype
+    cl = min(cfg.ssm_chunk, S)
+    assert S % cl == 0, (S, cl)
+    nc = S // cl
+
+    zxbcdt = u @ p["in_proj"].astype(dt_)
+    z, xbc, dtr = _mamba2_split(cfg, zxbcdt)
+    xbc = causal_conv1d(xbc, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_))
+    x, Bm, Cm = _mamba2_xbc_split(cfg, xbc)
+
+    x = x.reshape(B_, S, nh, hd).astype(jnp.float32)
+    Bm = Bm.reshape(B_, S, 1, st).astype(jnp.float32)    # ngroups=1, broadcast
+    Cm = Cm.reshape(B_, S, 1, st).astype(jnp.float32)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))     # [B, S, nh]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # [nh]
+
+    # chunk views
+    xc = x.reshape(B_, nc, cl, nh, hd)
+    Bc = jnp.broadcast_to(Bm.reshape(B_, nc, cl, 1, st), (B_, nc, cl, nh, st))
+    Cc = jnp.broadcast_to(Cm.reshape(B_, nc, cl, 1, st), (B_, nc, cl, nh, st))
+    dtc = dt.reshape(B_, nc, cl, nh)
+    dA = dtc * A                                               # [B, nc, cl, nh]
+    dA_cs = jnp.cumsum(dA, axis=2)                             # within-chunk
+
+    # intra-chunk (quadratic in cl, matmul-shaped => MXU)
+    # L[i, j] = exp(dA_cs[i] - dA_cs[j]) for i >= j
+    diff = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]   # [B,nc,i,j,nh]
+    ii = jnp.arange(cl)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcihs,bcjhs->bcijh", Cc, Bc) * L      # [B,nc,i,j,nh]
+    xdt = xc * dtc[..., None]                                  # [B,nc,cl,nh,hd]
+    y_intra = jnp.einsum("bcijh,bcjhd->bcihd", scores, xdt)
+
+    # chunk states + inter-chunk recurrence (scan over nc chunks)
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)        # [B,nc,cl,nh]
+    states = jnp.einsum("bcjhs,bcjhd->bchsd",
+                        Bc * (dtc * decay_to_end)[..., None], xc)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                  # [B, nc, nh]
+
+    def scan_fn(h, inp):
+        s_c, dec_c = inp
+        h_new = h * dec_c[..., None, None] + s_c
+        return h_new, h                                        # emit PREVIOUS
+
+    h0 = jnp.zeros((B_, nh, st, hd), jnp.float32)
+    _, h_prev = maybe_scan(
+        scan_fn, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                   # [B,nc,nh,st,hd]
+
+    decay_from_start = jnp.exp(dA_cs)                          # [B,nc,cl,nh]
+    y_inter = jnp.einsum("bcihs,bchsd->bcihd",
+                         Cc * decay_from_start[..., None], h_prev)
+
+    y = (y_intra + y_inter).reshape(B_, S, nh, hd)
+    y = y + x * p["D_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B_, S, d["d_inner"])
+    y = rmsnorm_gated(y, z, p["norm_w"], dt_)
+    return y @ p["out_proj"].astype(dt_)
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int):
+    d = mamba2_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d["conv_dim"]), cfg.dtype),
+        "ssd": jnp.zeros((batch, d["nheads"], d["state"], d["hd"]), jnp.float32),
+    }
+
+
+def mamba2_decode(p: Dict, cfg: ModelConfig, u: jnp.ndarray, state: Dict):
+    """Single-token recurrent step. u: [B, 1, D]."""
+    d = mamba2_dims(cfg)
+    B_ = u.shape[0]
+    nh, hd, st = d["nheads"], d["hd"], d["state"]
+    dt_ = cfg.dtype
+
+    zxbcdt = (u[:, 0] @ p["in_proj"].astype(dt_))
+    z, xbc, dtr = _mamba2_split(cfg, zxbcdt)
+    xbc, conv_state = conv_step(xbc, state["conv"],
+                                p["conv_w"].astype(dt_), p["conv_b"].astype(dt_))
+    x, Bm, Cm = _mamba2_xbc_split(cfg, xbc)
+    x = x.reshape(B_, nh, hd).astype(jnp.float32)
+    Bm = Bm.reshape(B_, 1, st).astype(jnp.float32)
+    Cm = Cm.reshape(B_, 1, st).astype(jnp.float32)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dec = jnp.exp(dt * A)                                       # [B, nh]
+    # h: [B, nh, st, hd]
+    h = state["ssd"] * dec[..., None, None] + jnp.einsum(
+        "bgs,bhd,bh->bhsd", Bm, x, dt)
+    y = jnp.einsum("bgs,bhsd->bhd", Cm, h)
+    y = y + x * p["D_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B_, d["d_inner"])
+    y = rmsnorm_gated(y, z, p["norm_w"], dt_)
+    out = (y @ p["out_proj"].astype(dt_))[:, None, :]
+    return out, {"conv": conv_state, "ssd": h}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (griffin / recurrentgemma recurrent block)
+# ---------------------------------------------------------------------------
+
+_RG_C = 8.0
+
+
+def rglru_init(cfg: ModelConfig) -> Dict:
+    D = cfg.d_model
+    L = cfg.lru_width or cfg.d_model
+    pd = cfg.param_dtype
+    return {
+        "proj_x": ParamSpec((D, L), ("embed", "ffn"), pd),
+        "proj_gate": ParamSpec((D, L), ("embed", "ffn"), pd),
+        "conv_w": ParamSpec((L, 4), ("ffn", None), pd, scale=0.5),
+        "conv_b": ParamSpec((L,), ("ffn",), pd, init="zeros"),
+        "w_i": ParamSpec((L, L), ("ffn", "ffn2"), pd),
+        "b_i": ParamSpec((L,), ("ffn",), pd, init="zeros"),
+        "w_r": ParamSpec((L, L), ("ffn", "ffn2"), pd),
+        "b_r": ParamSpec((L,), ("ffn",), pd, init="zeros"),
+        "a_param": ParamSpec((L,), ("ffn",), pd, init="ones", scale=1.0),
+        "out_proj": ParamSpec((L, D), ("ffn", "embed"), pd),
+    }
+
+
+def _rglru_coeffs(p: Dict, cfg: ModelConfig, xc: jnp.ndarray):
+    """xc: [..., L] post-conv activations -> (a, gated_x) f32."""
+    dt = cfg.dtype
+    r = jax.nn.sigmoid((xc @ p["w_r"].astype(dt) + p["b_r"].astype(dt))
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid((xc @ p["w_i"].astype(dt) + p["b_i"].astype(dt))
+                       .astype(jnp.float32))
+    log_a = -_RG_C * jax.nn.softplus(p["a_param"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated = xc.astype(jnp.float32) * i * mult
+    return a, gated
+
+
+def rglru_train(p: Dict, cfg: ModelConfig, u: jnp.ndarray) -> jnp.ndarray:
+    """u: [B, S, D] -> [B, S, D] via h_t = a_t * h_{t-1} + m_t * x_t
+    (associative scan over S)."""
+    dt = cfg.dtype
+    gate = jax.nn.gelu((u @ p["proj_gate"].astype(dt)).astype(jnp.float32))
+    x = u @ p["proj_x"].astype(dt)
+    xc = causal_conv1d(x, p["conv_w"].astype(dt), p["conv_b"].astype(dt))
+    a, gated = _rglru_coeffs(p, cfg, xc)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    y = (gate * h).astype(dt)
+    return y @ p["out_proj"].astype(dt)
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int):
+    L = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, 3, L), cfg.dtype),
+        "h": jnp.zeros((batch, L), jnp.float32),
+    }
+
+
+def rglru_decode(p: Dict, cfg: ModelConfig, u: jnp.ndarray, state: Dict):
+    dt = cfg.dtype
+    gate = jax.nn.gelu((u[:, 0] @ p["proj_gate"].astype(dt)).astype(jnp.float32))
+    x = u[:, 0] @ p["proj_x"].astype(dt)
+    xc, conv_state = conv_step(x, state["conv"], p["conv_w"].astype(dt),
+                               p["conv_b"].astype(dt))
+    a, gated = _rglru_coeffs(p, cfg, xc)
+    h = a * state["h"] + gated
+    y = (gate * h).astype(dt)
+    out = (y @ p["out_proj"].astype(dt))[:, None, :]
+    return out, {"conv": conv_state, "h": h}

@@ -1,0 +1,55 @@
+"""Scan-vs-unroll switch for cost measurement.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE, not times its trip
+count, so FLOPs/bytes of scan-over-layers programs are structurally
+undercounted.  The dry-run therefore lowers small (1-group and 2-group)
+variants of each cell with every scan UNROLLED — giving exact per-layer
+costs for two points — and extrapolates linearly (exact: every group body
+is identical).  This module provides the switch; production code paths
+always scan.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_UNROLL: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "unroll_scans", default=False)
+
+
+@contextlib.contextmanager
+def unroll_scans():
+    token = _UNROLL.set(True)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(token)
+
+
+def unrolling() -> bool:
+    return _UNROLL.get()
+
+
+def maybe_scan(f: Callable, init: Any, xs: Any, length: Optional[int] = None):
+    """lax.scan normally; a python loop under the unroll context (so every
+    iteration's ops land in the HLO and are counted)."""
+    if not unrolling():
+        return jax.lax.scan(f, init, xs)
+    if length is None:
+        length = jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(length):
+        xi = jax.tree.map(lambda a: a[i], xs) if xs is not None else None
+        carry, y = f(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys_stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys_stacked = None
+    return carry, ys_stacked

@@ -1,0 +1,2 @@
+"""Continuous-batching serving engine over the paged KV store."""
+from .engine import Request, ServingEngine

@@ -1,0 +1,230 @@
+"""Continuous-batching serving engine over the paged KV store.
+
+The split architecture at serving time (DESIGN.md §3.4):
+  * data plane: ONE compiled decode_step over fixed-shape pool arrays —
+    never retraced, never reallocated (the pre-fault + mmap-cache analogue);
+  * control plane: this engine + core.kvcache.PagedKVCache do *metadata
+    only* — slot admission, page allocation (pre-allocated free list),
+    publish-on-page-fill (relink), refcounted prefix sharing, CoW forks.
+
+Prompt ingestion is chunked through the same decode path (token-at-a-time
+on this CPU host; the TPU deployment fuses prefill — DESIGN.md §8 notes the
+difference).  Sampling is greedy or top-k on the host.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.kvcache import KVGeometry, PagedKVCache
+from ..models.registry import ModelAPI
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    output: List[int] = field(default_factory=list)
+    slot: Optional[int] = None
+    seq_id: Optional[int] = None
+    prompt_pos: int = 0
+    done: bool = False
+
+    @property
+    def next_input(self) -> int:
+        if self.prompt_pos < len(self.prompt):
+            return self.prompt[self.prompt_pos]
+        return self.output[-1] if self.output else 0
+
+    @property
+    def in_prefill(self) -> bool:
+        return self.prompt_pos < len(self.prompt)
+
+
+class ServingEngine:
+    def __init__(self, api: ModelAPI, params, *, max_batch: int = 8,
+                 max_seq: int = 512, page_tokens: int = 16,
+                 greedy: bool = True, seed: int = 0) -> None:
+        self.api = api
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.page_tokens = page_tokens
+        self.greedy = greedy
+        self.rng = np.random.default_rng(seed)
+        self.caches = api.init_caches(max_batch, max_seq, page_tokens)
+        pages_per_seq = self.caches["page_table"].shape[1] \
+            if "page_table" in self.caches else -(-max_seq // page_tokens)
+        self.controller = PagedKVCache(KVGeometry(
+            num_pages=int(np.asarray(self.caches["page_table"]).max()) + 1
+            if "page_table" in self.caches else max_batch * pages_per_seq,
+            page_tokens=page_tokens, max_seqs=max_batch,
+            pages_per_seq=pages_per_seq))
+        self._step_fn = jax.jit(api.decode_step)
+        self.waiting: List[Request] = []
+        self.active: Dict[int, Request] = {}     # slot -> request
+        self.finished: List[Request] = []
+        self._rid = itertools.count()
+        self.steps = 0
+
+    # ------------------------------------------------------------------ API
+
+    def submit(self, prompt: List[int], max_new_tokens: int = 16) -> Request:
+        req = Request(next(self._rid), list(prompt), max_new_tokens)
+        self.waiting.append(req)
+        return req
+
+    def run_until_done(self, max_steps: int = 10000) -> List[Request]:
+        while (self.waiting or self.active) and self.steps < max_steps:
+            self.step()
+        return self.finished
+
+    # ------------------------------------------------------------------ engine step
+
+    def _admit(self) -> None:
+        free_slots = [s for s in range(self.max_batch) if s not in self.active]
+        while self.waiting and free_slots:
+            slot = free_slots.pop(0)
+            req = self.waiting.pop(0)
+            req.slot = slot
+            req.seq_id = self.controller.create_seq()
+            # slot/seq alignment: the engine allocates sequence slots in the
+            # same order as cache rows; reset the device length row
+            lengths = np.asarray(self.caches["lengths"]).copy()
+            lengths[slot] = 0
+            self.caches["lengths"] = jnp.asarray(lengths)
+            self.active[slot] = req
+
+    def step(self) -> None:
+        self._admit()
+        if not self.active:
+            return
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        for slot, req in self.active.items():
+            tokens[slot, 0] = req.next_input
+            # controller metadata: reserve capacity (page alloc on fill)
+            cur = int(np.asarray(self.caches["lengths"])[slot])
+            self.controller.ensure_capacity(req.seq_id, cur + 1)
+
+        logits, self.caches = self._step_fn(self.params, jnp.asarray(tokens),
+                                            self.caches)
+        logits = np.asarray(logits)[:, -1, :]
+        self.steps += 1
+
+        for slot, req in list(self.active.items()):
+            self.controller.advance(req.seq_id, 1)
+            if req.in_prefill:
+                req.prompt_pos += 1
+                continue
+            tok = self._sample(logits[slot])
+            req.output.append(tok)
+            total = int(np.asarray(self.caches["lengths"])[slot])
+            if len(req.output) >= req.max_new_tokens or total >= self.max_seq - 1:
+                req.done = True
+                self.finished.append(req)
+                self.controller.free_seq(req.seq_id)
+                del self.active[slot]
+
+    def _sample(self, row: np.ndarray) -> int:
+        if self.greedy:
+            return int(row.argmax())
+        z = (row - row.max()).astype(np.float64)
+        p = np.exp(z)
+        p /= p.sum()
+        return int(self.rng.choice(len(row), p=p))
+
+    # ------------------------------------------------------------------ forking
+
+    def fork(self, req: Request) -> Request:
+        """Zero-copy fork (beam/speculative): shares full pages by refcount;
+        the partially-filled tail page is CoW-copied on the device."""
+        assert req.slot is not None and not req.done
+        free_slots = [s for s in range(self.max_batch) if s not in self.active]
+        if not free_slots:
+            raise RuntimeError("no free slot for fork")
+        slot = free_slots[0]
+        child = Request(next(self._rid), list(req.prompt), req.max_new_tokens)
+        child.output = list(req.output)
+        child.prompt_pos = req.prompt_pos
+        child.slot = slot
+        child.seq_id = self.controller.fork(req.seq_id)
+        cow = self.controller.prepare_append(child.seq_id, 1)
+        # mirror controller metadata into the device tables
+        pt = np.asarray(self.caches["page_table"]).copy()
+        lengths = np.asarray(self.caches["lengths"]).copy()
+        ctrl_pt = self.controller.page_table()
+        # engine slots and controller sids are both dense ints; map directly
+        pt[slot, :] = pt[req.slot, :]
+        n_pages = len(ctrl_pt[child.seq_id][ctrl_pt[child.seq_id] != 0]) or 1
+        lengths[slot] = lengths[req.slot]
+        if cow is not None:
+            src, dst = cow
+            pt[slot, (int(lengths[slot]) // self.page_tokens)] = \
+                pt[req.slot, (int(lengths[slot]) // self.page_tokens)]
+            self._copy_page_on_device(pt, slot, int(lengths[slot]))
+        self.caches["page_table"] = jnp.asarray(pt)
+        self.caches["lengths"] = jnp.asarray(lengths)
+        self.active[slot] = child
+        return child
+
+    def _copy_page_on_device(self, pt, slot: int, length: int) -> None:
+        """Give the fork a private copy of its tail page in every layer pool
+        (the partial-block copy analogue — the only data movement a fork
+        costs)."""
+        tail_idx = length // self.page_tokens
+        src_page = int(pt[slot, tail_idx])
+        # allocate a fresh device page: use the next never-used page id if
+        # available; otherwise fall back to sharing (read-only tail)
+        used = set(int(x) for x in pt.flatten())
+        pool_size = self._pool_size()
+        fresh = next((p for p in range(pool_size) if p not in used), None)
+        if fresh is None:
+            return
+        pt[slot, tail_idx] = fresh
+
+        def copy_pool(leaf):
+            if leaf.ndim == 5:      # [L, P, T, KV, hd]
+                return leaf.at[:, fresh].set(leaf[:, src_page])
+            if leaf.ndim == 4:      # [P, T, KV, hd]
+                return leaf.at[fresh].set(leaf[src_page])
+            return leaf
+
+        def walk(name, node):
+            if isinstance(node, dict):
+                return {k: walk(k, v) for k, v in node.items()}
+            if isinstance(node, tuple):
+                return tuple(copy_pool(x) if hasattr(x, "ndim") and x.ndim >= 4
+                             else x for x in node)
+            return node
+
+        for key in ("group", "tail", "pools"):
+            if key in self.caches:
+                self.caches[key] = walk(key, self.caches[key])
+
+    def _pool_size(self) -> int:
+        def find(node):
+            if isinstance(node, dict):
+                for v in node.values():
+                    r = find(v)
+                    if r:
+                        return r
+            if isinstance(node, tuple):
+                for x in node:
+                    if hasattr(x, "ndim") and x.ndim == 5:
+                        return x.shape[1]
+                    if hasattr(x, "ndim") and x.ndim == 4:
+                        return x.shape[0]
+            return 0
+        for key in ("group", "tail", "pools"):
+            if key in self.caches:
+                r = find(self.caches[key])
+                if r:
+                    return r
+        return 0

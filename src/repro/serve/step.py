@@ -1,0 +1,122 @@
+"""serve_step builders for the production mesh.
+
+Two distribution strategies for decode (the paper's data plane at scale):
+
+  * ``gspmd``     — one jit; pools sharded by dist.sharding.cache_specs and
+                    every gather/scatter left to the SPMD partitioner.  This
+                    is the BASELINE the roofline table measures; the
+                    partitioner cannot prove page-locality of the gathers,
+                    so it materializes cross-shard collectives.
+  * ``shard_map`` — the paper-faithful split: the batch ("pod","data") axes
+                    are MANUAL — each shard owns its sequences' pages
+                    outright (page ids are local, U-Split-style private
+                    staging), so page-table gathers compile to local
+                    dynamic-gathers with ZERO collectives; the "model" axis
+                    stays auto (TP within the attention/FFN handled by
+                    GSPMD).  This is the optimized variant of §Perf.
+
+Both produce identical logits (tests assert this on small meshes).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..dist.sharding import batch_axes, cache_specs, fit_batch_axes, serve_rules
+from ..models.registry import ModelAPI
+from ..models.shardctx import serving_model_axis
+from ..models.spec import partition_specs
+
+
+def serve_param_shardings(api: ModelAPI, mesh: Mesh):
+    specs = partition_specs(api.init_specs(), serve_rules(mesh), mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_serve_step(api: ModelAPI, mesh: Mesh, caches_like: Any,
+                    *, variant: str = "gspmd", donate: bool = True):
+    """Returns (serve_step, param_shardings, cache_shardings).
+
+    serve_step(params, tokens [B,1], caches) -> (logits, caches)."""
+    assert variant in ("gspmd", "shard_map")
+    batch = caches_like["lengths"].shape[0] if "lengths" in caches_like else 0
+    ba = fit_batch_axes(mesh, batch) if batch else batch_axes(mesh)
+    if not ba and variant == "shard_map":
+        variant = "gspmd"      # nothing to shard manually (e.g. B=1)
+    param_sh = serve_param_shardings(api, mesh)
+    cache_pspecs = cache_specs(mesh, caches_like)
+    cache_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), cache_pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    tok_sh = NamedSharding(mesh, P(ba if ba else None))
+
+    md = "model" if "model" in mesh.shape else None
+    if variant == "gspmd":
+        def fn(params, tokens, caches):
+            with serving_model_axis(md):
+                return api.decode_step(params, tokens, caches)
+    else:
+        n_ba = 1
+        for a in ba:
+            n_ba *= mesh.shape[a]
+
+        def local_step(params, tokens, caches):
+            # page ids become shard-local: each data shard owns a contiguous
+            # block of the page pool (private chains, engine-enforced)
+            caches = dict(caches)
+            pt = caches["page_table"]
+            local_pool = _local_pool_pages(caches)
+            if local_pool is not None:
+                caches["page_table"] = pt % local_pool
+            with serving_model_axis(md):
+                return api.decode_step(params, tokens, caches)
+
+        manual_specs = jax.tree.map(_drop_model_axis, cache_pspecs,
+                                    is_leaf=lambda x: isinstance(x, P))
+        fn = jax.shard_map(
+            local_step, mesh=mesh,
+            in_specs=(P(), P(ba), manual_specs),
+            out_specs=(P(ba), manual_specs),
+            axis_names=set(ba), check_vma=False)
+
+    donate_args = (2,) if donate else ()
+    step = jax.jit(fn,
+                   in_shardings=(param_sh, tok_sh, cache_sh),
+                   out_shardings=(NamedSharding(mesh, P(ba if ba else None)),
+                                  cache_sh),
+                   donate_argnums=donate_args)
+    return step, param_sh, cache_sh
+
+
+def _drop_model_axis(spec: P) -> P:
+    """shard_map manual specs cover only the batch axes; "model" stays auto."""
+    cleaned = tuple(None if ax == "model" else ax for ax in spec)
+    while cleaned and cleaned[-1] is None:
+        cleaned = cleaned[:-1]
+    return P(*cleaned)
+
+
+def _local_pool_pages(caches: Dict) -> Any:
+    """Local page count = a pool leaf's page-dim size (post-shard_map).
+    Pools live under '*_attn' keys (lm) or 'pools' (encdec); recurrent/conv
+    state never carries page ids."""
+    found = []
+
+    def visit(path, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        if ("_attn" in name or "pools" in name) and hasattr(leaf, "ndim"):
+            if leaf.ndim == 5:
+                found.append(leaf.shape[1])
+            elif leaf.ndim == 4:
+                found.append(leaf.shape[0])
+        return leaf
+
+    for key in ("group", "tail", "pools"):
+        if key in caches:
+            jax.tree_util.tree_map_with_path(visit, {key: caches[key]})
+    return found[0] if found else None

@@ -1,0 +1,5 @@
+"""Training substrate: AdamW, train_step builder (FSDP/TP + microbatching +
+compressed pod reduction), and the fault-aware loop."""
+from .loop import LoopConfig, LoopResult, run_training
+from .optimizer import AdamWConfig, adamw_init, adamw_update, global_norm
+from .step import make_train_step

@@ -1,0 +1,85 @@
+"""Training loop: data pipeline -> train_step -> checkpoint -> fault path.
+
+Single-host runnable (smoke configs on CPU), but structured exactly as the
+multi-host deployment: the loop consumes heartbeats, saves through the
+SplitFS checkpoint manager, and on (injected or real) failure executes a
+RemeshPlan — restore + pipeline reshard + continue.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+from ..data.pipeline import TokenPipeline
+from ..dist.fault import HeartbeatMonitor
+from ..models.registry import ModelAPI
+from ..models.spec import init_params
+from .optimizer import AdamWConfig
+from .step import make_train_step
+
+
+@dataclass
+class LoopConfig:
+    steps: int = 100
+    ckpt_every: int = 20
+    log_every: int = 10
+    microbatches: int = 1
+    seed: int = 0
+
+
+@dataclass
+class LoopResult:
+    losses: List[float] = field(default_factory=list)
+    restored_from: Optional[int] = None
+    steps_run: int = 0
+
+
+def run_training(api: ModelAPI, mesh, pipeline: TokenPipeline,
+                 loop_cfg: LoopConfig, opt_cfg: AdamWConfig,
+                 ckpt: Optional[CheckpointManager] = None,
+                 monitor: Optional[HeartbeatMonitor] = None,
+                 worker: int = 0,
+                 crash_at: Optional[int] = None) -> LoopResult:
+    """Run (or resume) training.  ``crash_at`` raises after that step's
+    checkpointable state exists — tests use it to exercise restart."""
+    train_step, param_sh, batch_sh, init_state = make_train_step(
+        api, mesh, opt_cfg, microbatches=loop_cfg.microbatches,
+        compress_pod_grads="pod" in mesh.shape)
+
+    result = LoopResult()
+    start = 0
+    with jax.set_mesh(mesh):
+        params = init_params(api.init_specs(), jax.random.PRNGKey(loop_cfg.seed))
+        state = init_state(params)
+        if ckpt is not None:
+            restored = ckpt.restore(state)
+            if restored is not None:
+                start, state, extra = restored
+                pipeline.restore(extra.get("pipeline_step", start))
+                result.restored_from = start
+
+        for step in range(start, loop_cfg.steps):
+            t0 = time.monotonic()
+            batch = {k: jax.device_put(v, batch_sh)
+                     for k, v in next(pipeline).items()}
+            state, metrics = train_step(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.monotonic() - t0
+            result.losses.append(loss)
+            result.steps_run += 1
+            if monitor is not None:
+                monitor.beat(worker, step, dt)
+            if not np.isfinite(loss):
+                raise FloatingPointError(f"loss diverged at step {step}: {loss}")
+            if ckpt is not None and (step + 1) % loop_cfg.ckpt_every == 0:
+                ckpt.save(step + 1, state,
+                          extra={"pipeline_step": pipeline.snapshot()})
+            if crash_at is not None and step + 1 >= crash_at:
+                raise RuntimeError(f"injected crash at step {step + 1}")
+    return result

@@ -1,0 +1,174 @@
+"""train_step builder: GSPMD (FSDP + TP) + microbatch accumulation +
+optional int8-compressed inter-pod gradient reduction.
+
+Structure:
+  * parameters sharded by dist.sharding.train_rules (FSDP over data/pod,
+    TP over model) — GSPMD inserts the layer-wise all-gathers inside the
+    layer scan, which overlaps them with compute;
+  * the batch is split into ``microbatches`` slices scanned with gradient
+    accumulation (activation memory / global batch decoupling);
+  * with a "pod" mesh axis and ``compress_pod_grads=True`` the function is
+    wrapped in shard_map(manual={'pod'}, auto={'data','model'}): each pod
+    computes grads on its half of the batch via GSPMD, then the pod-axis
+    mean runs through dist.compression.compressed_psum (int8 + error
+    feedback on the slow links).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..dist import compression
+from ..dist.sharding import batch_axes, train_rules
+from ..models.registry import ModelAPI
+from ..models.shardctx import activation_batch_axes, serving_model_axis
+from ..models.spec import partition_specs
+from ..scan_util import maybe_scan
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def _split_microbatch(batch: Dict, n: int, i: jnp.ndarray) -> Dict:
+    def slice_one(x):
+        mb = x.shape[0] // n
+        return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, 0)
+
+    return jax.tree.map(slice_one, batch)
+
+
+def make_loss_and_grad(api: ModelAPI, microbatches: int) -> Callable:
+    def loss_fn(params, batch):
+        return api.loss(params, batch)
+
+    if microbatches <= 1:
+        return jax.value_and_grad(loss_fn)
+
+    def accumulated(params, batch):
+        def body(carry, i):
+            loss_acc, grad_acc = carry
+            mb = _split_microbatch(batch, microbatches, i)
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            grad_acc = jax.tree.map(jnp.add, grad_acc,
+                                    jax.tree.map(lambda g: g / microbatches,
+                                                 grads))
+            return (loss_acc + loss / microbatches, grad_acc), None
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = maybe_scan(body, (jnp.zeros((), jnp.float32), zero),
+                                      jnp.arange(microbatches))
+        return loss, grads
+
+    return accumulated
+
+
+def make_train_step(api: ModelAPI, mesh: Mesh, opt_cfg: AdamWConfig,
+                    *, microbatches: int = 1,
+                    compress_pod_grads: bool = False,
+                    donate: bool = True):
+    """Returns (train_step, param_shardings, state_shardings, batch_sharding).
+
+    train_step(state, batch) -> (state, metrics); state = {params, opt}.
+    """
+    # XLA's SPMD partitioner CHECK-fails on enc-dec models' embedding
+    # scatter/gather inside manual-pod regions (spmd_partitioner_util.cc:504,
+    # see EXPERIMENTS.md §Dry-run notes); those fall back to plain 3-axis
+    # GSPMD with an uncompressed pod reduction.
+    if api.cfg.family == "encdec":
+        compress_pod_grads = False
+    use_pod_early = compress_pod_grads and "pod" in mesh.shape
+    rules = train_rules(mesh, include_pod_in_fsdp=not use_pod_early)
+    specs = api.init_specs()
+    pspecs = partition_specs(specs, rules, mesh)
+    param_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                                   is_leaf=lambda x: isinstance(x, P))
+    ba = batch_axes(mesh)
+    batch_sharding = NamedSharding(mesh, P(ba))
+    loss_and_grad = make_loss_and_grad(api, microbatches)
+    use_pod = compress_pod_grads and "pod" in mesh.shape
+
+    def apply_update(params, grads, opt_state):
+        new_params, new_opt, metrics = adamw_update(opt_cfg, params, grads,
+                                                    opt_state)
+        return new_params, new_opt, metrics
+
+    md = "model" if "model" in mesh.shape else None
+    if not use_pod:
+        def train_step(state, batch):
+            with activation_batch_axes(ba), serving_model_axis(md):
+                loss, grads = loss_and_grad(state["params"], batch)
+            new_params, new_opt, metrics = apply_update(state["params"], grads,
+                                                        state["opt"])
+            metrics["loss"] = loss
+            return {"params": new_params, "opt": new_opt}, metrics
+    else:
+        # hierarchical reduction: manual over "pod", GSPMD inside
+        def local_grads(params, batch):
+            loss, grads = loss_and_grad(params, batch)
+            return loss, grads
+
+        def train_step(state, batch):
+            def podwise(params, opt, batch, err):
+                with activation_batch_axes(("data",)), \
+                        serving_model_axis(md):  # pod axis is manual
+                    loss, grads = local_grads(params, batch)
+                # single-bucket compressed reduction across the slow axis
+                # (per-leaf collectives would emit ~600 subgraphs; flat
+                # bucketing is also what production reducers do)
+                flat, unravel = jax.flatten_util.ravel_pytree(grads)
+                pad = err.shape[0] - flat.shape[0]
+                flat = jnp.pad(flat, (0, pad))
+                reduced, new_err = compression.compressed_psum(flat, err,
+                                                               "pod")
+                grads = unravel(reduced[: reduced.shape[0] - pad])
+                loss = jax.lax.pmean(loss, "pod")
+                new_params, new_opt, metrics = apply_update(params, grads, opt)
+                metrics["loss"] = loss
+                return new_params, new_opt, metrics, new_err
+
+            # params replicated over pod (manual axis sees full arrays via
+            # P() in-specs because FSDP shards only over "data" here)
+            fn = jax.shard_map(
+                podwise, mesh=mesh,
+                in_specs=(P(), P(), P("pod"), P()),
+                out_specs=(P(), P(), P(), P()),
+                axis_names={"pod"}, check_vma=False)
+            new_params, new_opt, metrics, err = fn(
+                state["params"], state["opt"], batch, state["err"])
+            return {"params": new_params, "opt": new_opt, "err": err}, metrics
+
+    # state shardings: optimizer moments inherit the parameter sharding
+    state_shardings: Dict[str, Any] = {
+        "params": param_shardings,
+        "opt": {"mu": param_shardings, "nu": param_shardings,
+                "step": NamedSharding(mesh, P())},
+    }
+    if use_pod:
+        # flat error-feedback buffer, sharded across the in-pod axes
+        state_shardings["err"] = NamedSharding(mesh, P(("data", "model")))
+    metrics_shardings = {"loss": NamedSharding(mesh, P()),
+                         "grad_norm": NamedSharding(mesh, P()),
+                         "lr": NamedSharding(mesh, P())}
+    donate_args = (0,) if donate else ()
+    train_step = jax.jit(train_step,
+                         in_shardings=(state_shardings, batch_sharding),
+                         out_shardings=(state_shardings, metrics_shardings),
+                         donate_argnums=donate_args)
+
+    def init_state(params):
+        state = {"params": params, "opt": adamw_init(params)}
+        if use_pod:
+            n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+            span = mesh.shape["data"] * mesh.shape["model"]
+            n_padded = -(-n // span) * span
+            state["err"] = jnp.zeros((n_padded,), jnp.float32)
+        # place every leaf on its train sharding (donation requires inputs
+        # to arrive pre-sharded)
+        return jax.device_put(state, state_shardings)
+
+    return train_step, param_shardings, batch_sharding, init_state

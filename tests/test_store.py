@@ -1,0 +1,321 @@
+"""U-Split store semantics: modes, routing, relink, visibility, ablations,
+plus a hypothesis state-machine test against a plain-bytes oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import BLOCK_SIZE, Mode, NoEntError, PMDevice, Volume
+from repro.core.relink import relink
+from conftest import SMALL_GEOMETRY, make_store
+
+RNG = np.random.default_rng(7)
+
+
+def blk(n=1, seed=None):
+    r = np.random.default_rng(seed) if seed is not None else RNG
+    return r.integers(0, 256, n * BLOCK_SIZE, dtype=np.uint8).tobytes()
+
+
+# ---------------------------------------------------------------- basics
+
+
+def test_open_close_dup_shared_offset(store):
+    fd = store.open("f", create=True)
+    store.write(fd, b"0123456789")
+    fd2 = store.dup(fd)
+    store.lseek(fd, 2)
+    assert store.read(fd2, 3) == b"234"      # dup shares the offset
+    fd3 = store.open("f")                     # separate open: own offset
+    assert store.read(fd3, 3) == b"012"
+
+
+def test_read_past_eof_clamps(store):
+    fd = store.open("f", create=True)
+    store.write(fd, b"abc")
+    assert store.pread(fd, 100, 0) == b"abc"
+    assert store.pread(fd, 10, 50) == b""
+
+
+def test_unlink_then_open_fails(store):
+    store.write_file("f", b"data")
+    store.unlink("f")
+    with pytest.raises(NoEntError):
+        store.open("f")
+
+
+def test_rename_preserves_contents(store):
+    store.write_file("a", b"payload")
+    store.rename("a", "b")
+    assert store.read_file("b") == b"payload"
+    with pytest.raises(NoEntError):
+        store.open("a")
+
+
+def test_ftruncate_shrinks_and_frees(store):
+    data = blk(4)
+    store.write_file("f", data)
+    fd = store.open("f")
+    free_before = store.ksplit.pool.num_free
+    store.ftruncate(fd, BLOCK_SIZE + 10)
+    assert store.read_file("f") == data[: BLOCK_SIZE + 10]
+    assert store.ksplit.pool.num_free > free_before
+
+
+# ---------------------------------------------------------------- appends + relink
+
+
+def test_aligned_appends_are_zero_copy(store):
+    fd = store.open("f", create=True)
+    for i in range(8):
+        store.write(fd, blk(seed=i))
+    store.fsync(fd)
+    assert store.stats.copied_bytes == 0
+    assert store.stats.relinked_blocks == 8
+    assert store.read_file("f") == b"".join(blk(seed=i) for i in range(8))
+
+
+def test_coalesced_appends_single_relink(store):
+    fd = store.open("f", create=True)
+    for i in range(10):
+        store.write(fd, blk(seed=i))
+    assert len(store._fds[fd].state.staged) == 1, "contiguous appends coalesce"
+
+
+def test_unaligned_append_copies_only_partials(store):
+    fd = store.open("f", create=True)
+    store.write(fd, b"x" * 100)              # partial first block
+    store.fsync(fd)
+    store.write(fd, b"y" * (BLOCK_SIZE * 2))  # unaligned 2-block append
+    store.fsync(fd)
+    # head partial (to offset 100) is copied; aligned middle relinks
+    assert 0 < store.stats.copied_bytes < BLOCK_SIZE
+    assert store.stats.relinked_blocks >= 2
+    assert store.read_file("f") == b"x" * 100 + b"y" * (BLOCK_SIZE * 2)
+
+
+def test_staged_appends_readable_before_fsync(store):
+    fd = store.open("f", create=True)
+    store.write(fd, b"before-fsync")
+    assert store.pread(fd, 12, 0) == b"before-fsync"
+    assert store.ksplit.stat("f").size == 0   # not yet published
+    store.fsync(fd)
+    assert store.ksplit.stat("f").size == 12
+
+
+def test_fsync_is_idempotent_and_stable(store):
+    fd = store.open("f", create=True)
+    store.write(fd, blk(3))
+    store.fsync(fd)
+    before = store.read_file("f")
+    store.fsync(fd)
+    assert store.read_file("f") == before
+
+
+# ---------------------------------------------------------------- overwrites per mode
+
+
+@pytest.mark.parametrize("mode", [Mode.POSIX, Mode.SYNC, Mode.STRICT])
+def test_overwrite_visibility_all_modes(volume, mode):
+    s = make_store(volume, mode=mode, oplog_slot=0 if mode is Mode.STRICT else None)
+    fd = s.open("f", create=True)
+    s.write(fd, blk(2, seed=1))
+    s.fsync(fd)
+    s.pwrite(fd, b"NEW", 100)
+    assert s.pread(fd, 3, 100) == b"NEW"
+    s.fsync(fd)
+    assert s.pread(fd, 3, 100) == b"NEW"
+
+
+def test_strict_overwrite_staged_not_inplace(volume):
+    s = make_store(volume, mode=Mode.STRICT, oplog_slot=0)
+    fd = s.open("f", create=True)
+    s.write(fd, blk(1, seed=1))
+    s.fsync(fd)
+    published = s.ksplit.inodes[s._fds[fd].state.ino].extents.lookup_block(0)
+    s.pwrite(fd, blk(1, seed=2), 0)          # full-block overwrite
+    # pre-fsync: the published block is untouched (atomicity!)
+    raw = bytes(s.device.read_silent(published * BLOCK_SIZE, BLOCK_SIZE))
+    assert raw == blk(1, seed=1)
+    s.fsync(fd)
+    assert s.read_file("f") == blk(1, seed=2)
+    assert s.stats.copied_bytes == 0          # block-aligned: relink swap
+
+
+def test_posix_overwrite_is_inplace(store):
+    fd = store.open("f", create=True)
+    store.write(fd, blk(1, seed=1))
+    store.fsync(fd)
+    pblk = store.ksplit.inodes[store._fds[fd].state.ino].extents.lookup_block(0)
+    store.pwrite(fd, b"Z" * 16, 0)
+    raw = bytes(store.device.read_silent(pblk * BLOCK_SIZE, 16))
+    assert raw == b"Z" * 16                   # landed in place immediately
+
+
+# ---------------------------------------------------------------- visibility across instances
+
+
+def test_cross_process_visibility(volume):
+    a = make_store(volume, mode=Mode.POSIX)
+    b = make_store(volume, mode=Mode.SYNC)
+    fda = a.open("shared", create=True)
+    a.write(fda, blk(2, seed=3))
+    # staged appends are private until fsync (paper §3.2 Visibility)
+    assert b.stat_size("shared") == 0
+    a.fsync(fda)
+    fdb = b.open("shared")
+    assert b.read_file("shared") == blk(2, seed=3)
+    # overwrites are immediately visible
+    a.pwrite(fda, b"LIVE", 10)
+    assert b.pread(fdb, 4, 10) == b"LIVE"
+
+
+def test_concurrent_modes_do_not_interfere(volume):
+    strict = make_store(volume, mode=Mode.STRICT, oplog_slot=0)
+    posix = make_store(volume, mode=Mode.POSIX)
+    f1 = strict.open("s", create=True)
+    f2 = posix.open("p", create=True)
+    strict.write(f1, blk(1, seed=4))
+    posix.write(f2, blk(1, seed=5))
+    strict.fsync(f1)
+    posix.fsync(f2)
+    assert strict.read_file("s") == blk(1, seed=4)
+    assert posix.read_file("p") == blk(1, seed=5)
+    assert strict.stats.log_entries > 0
+    assert posix.stats.log_entries == 0
+
+
+# ---------------------------------------------------------------- ablations (Fig 3)
+
+
+def test_ablation_split_only_routes_appends_to_kernel(volume):
+    s = make_store(volume, stage_appends=False)
+    fd = s.open("f", create=True)
+    s.write(fd, blk(2, seed=6))
+    assert s.stats.staged_bytes == 0
+    assert s.read_file("f") == blk(2, seed=6)
+
+
+def test_ablation_copy_publish_matches_relink(volume):
+    data = [blk(1, seed=i) for i in range(4)]
+    s1 = make_store(volume, publish_mode="copy")
+    s2 = make_store(volume, publish_mode="relink")
+    for s, name in ((s1, "c"), (s2, "r")):
+        fd = s.open(name, create=True)
+        for d in data:
+            s.write(fd, d)
+        s.fsync(fd)
+    assert s1.read_file("c") == s2.read_file("r")
+    assert s1.stats.relinked_blocks == 0 and s1.stats.copied_bytes > 0
+    assert s2.stats.relinked_blocks == 4 and s2.stats.copied_bytes == 0
+
+
+# ---------------------------------------------------------------- relink primitive
+
+
+def test_relink_primitive_paper_signature(volume):
+    s = make_store(volume)
+    s.write_file("src", blk(4, seed=9))
+    s.write_file("dst", blk(2, seed=10))
+    res = relink(s.ksplit, "src", BLOCK_SIZE, "dst", 0, 2 * BLOCK_SIZE)
+    assert res == {"moved_blocks": 2, "copied_bytes": 0}
+    assert s.read_file("dst")[: 2 * BLOCK_SIZE] == blk(4, seed=9)[
+        BLOCK_SIZE : 3 * BLOCK_SIZE]
+
+
+def test_relink_partial_blocks_copied(volume):
+    s = make_store(volume)
+    s.write_file("src", blk(2, seed=11))
+    s.write_file("dst", blk(2, seed=12))
+    res = relink(s.ksplit, "src", 100, "dst", 100, BLOCK_SIZE)
+    assert res["moved_blocks"] == 0           # nothing block-aligned fits
+    assert res["copied_bytes"] == BLOCK_SIZE
+    expect = blk(2, seed=12)[:100] + blk(2, seed=11)[100 : 100 + BLOCK_SIZE] \
+        + blk(2, seed=12)[100 + BLOCK_SIZE:]
+    assert s.read_file("dst") == expect
+
+
+# ---------------------------------------------------------------- oracle property test
+
+
+@st.composite
+def op_sequences(draw):
+    ops = []
+    for _ in range(draw(st.integers(3, 25))):
+        kind = draw(st.sampled_from(
+            ["append", "overwrite", "read", "fsync", "truncate"]))
+        size = draw(st.integers(1, 3 * BLOCK_SIZE))
+        off = draw(st.integers(0, 4 * BLOCK_SIZE))
+        seed = draw(st.integers(0, 2**16))
+        ops.append((kind, off, size, seed))
+    return ops
+
+
+@given(op_sequences(),
+       st.sampled_from([Mode.POSIX, Mode.SYNC, Mode.STRICT]))
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_store_matches_bytes_oracle(ops, mode):
+    """The store must behave exactly like an in-memory byte array for any
+    interleaving of appends/overwrites/reads/fsyncs/truncates."""
+    device = PMDevice(size=64 * 1024 * 1024)
+    volume = Volume.format(device, SMALL_GEOMETRY)
+    s = make_store(volume, mode=mode,
+                   oplog_slot=0 if mode is Mode.STRICT else None)
+    fd = s.open("f", create=True)
+    oracle = bytearray()
+    for kind, off, size, seed in ops:
+        data = np.random.default_rng(seed).integers(
+            0, 256, size, dtype=np.uint8).tobytes()
+        if kind == "append":
+            s.write(fd, data) if s._fds[fd].offset == len(oracle) else \
+                s.pwrite(fd, data, len(oracle))
+            s.lseek(fd, 0, 2)
+            oracle.extend(data)
+        elif kind == "overwrite":
+            off = min(off, len(oracle))
+            s.pwrite(fd, data, off)
+            oracle[off : off + size] = data
+            if len(oracle) < off + size:
+                pass  # bytearray slice-assign already extended
+        elif kind == "read":
+            off = min(off, len(oracle))
+            got = s.pread(fd, size, off)
+            assert got == bytes(oracle[off : off + size])
+        elif kind == "fsync":
+            s.fsync(fd)
+        elif kind == "truncate":
+            new = min(off, len(oracle))
+            s.ftruncate(fd, new)
+            del oracle[new:]
+    s.fsync(fd)
+    assert s.read_file("f") == bytes(oracle)
+
+
+def test_regression_tail_swap_shared_staging_block():
+    """Hypothesis-found: extent A's partial-tail-block relink must not carry
+    away bytes a later-staged extent B still references (A and B share a
+    staging block).  The fix copies the shared tail instead of swapping."""
+    device = PMDevice(size=64 * 1024 * 1024)
+    volume = Volume.format(device, SMALL_GEOMETRY)
+    s = make_store(volume, mode=Mode.STRICT, oplog_slot=0)
+    fd = s.open("f", create=True)
+    oracle = bytearray()
+
+    def append(n, seed):
+        data = np.random.default_rng(seed).integers(0, 256, n,
+                                                    dtype=np.uint8).tobytes()
+        s.pwrite(fd, data, len(oracle))
+        oracle.extend(data)
+
+    for _ in range(5):
+        append(1, 0)
+    append(2319, 1)
+    s.fsync(fd)
+    append(1773, 2)                      # A: tail block will be shared
+    s.pwrite(fd, b"Z", 1)                # B: staged overwrite, same block
+    oracle[1:2] = b"Z"
+    append(1, 3)
+    append(1, 4)
+    s.fsync(fd)
+    assert s.read_file("f") == bytes(oracle)

@@ -1,0 +1,169 @@
+"""Training loop (convergence, microbatch equivalence, checkpoint restart)
+and the serving engine (continuous batching, slot independence, fork)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.core import Mode, PMDevice, USplit, Volume, VolumeGeometry
+from repro.data import TokenPipeline
+from repro.models import build_model
+from repro.models.spec import init_params
+from repro.serve import ServingEngine
+from repro.train import AdamWConfig, LoopConfig, run_training
+from repro.train.step import make_train_step
+
+GEOM = VolumeGeometry(meta_blocks=256, journal_blocks=512, oplog_slots=2,
+                      oplog_blocks=128)
+
+
+def host_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.fixture(scope="module")
+def qwen_smoke():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    return cfg, build_model(cfg)
+
+
+def test_loss_decreases(qwen_smoke):
+    cfg, api = qwen_smoke
+    pipe = TokenPipeline(cfg, global_batch=4, seq_len=32, seed=3)
+    res = run_training(api, host_mesh(), pipe,
+                       LoopConfig(steps=12, ckpt_every=100),
+                       AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=12))
+    assert np.mean(res.losses[-3:]) < np.mean(res.losses[:3]) - 0.1
+
+
+def test_microbatch_equivalence(qwen_smoke):
+    """grad accumulation over 4 microbatches == one big batch (same data)."""
+    cfg, api = qwen_smoke
+    mesh = host_mesh()
+    batch = TokenPipeline(cfg, global_batch=8, seq_len=16, seed=5).batch_at(0)
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    outs = {}
+    for mb in (1, 4):
+        step, _, _, init_state = make_train_step(
+            api, mesh, AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=2),
+            microbatches=mb)
+        with jax.set_mesh(mesh):
+            params = init_params(api.init_specs(), jax.random.PRNGKey(1))
+            state = init_state(params)
+            state, metrics = step(state, batch)
+            outs[mb] = (float(metrics["loss"]),
+                        np.asarray(jax.tree.leaves(state["params"])[0]))
+    assert outs[1][0] == pytest.approx(outs[4][0], rel=2e-3)
+    np.testing.assert_allclose(outs[1][1], outs[4][1], atol=2e-3, rtol=2e-2)
+
+
+def test_checkpoint_crash_restart_resumes_exactly(qwen_smoke):
+    cfg, api = qwen_smoke
+    mesh = host_mesh()
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+
+    def fresh_ckpt(device):
+        vol = Volume.format(device, GEOM)
+        store = USplit(vol, mode=Mode.SYNC, staging_file_bytes=8 * 1024 * 1024,
+                       staging_prealloc=2, staging_background=False)
+        return CheckpointManager(store)
+
+    # uninterrupted baseline
+    dev_a = PMDevice(size=256 * 1024 * 1024)
+    pipe = TokenPipeline(cfg, global_batch=4, seq_len=32, seed=7)
+    base = run_training(api, mesh, pipe, LoopConfig(steps=10, ckpt_every=4),
+                        opt, ckpt=fresh_ckpt(dev_a))
+    # crashed + resumed run
+    dev_b = PMDevice(size=256 * 1024 * 1024)
+    ckpt_b = fresh_ckpt(dev_b)
+    pipe_b = TokenPipeline(cfg, global_batch=4, seq_len=32, seed=7)
+    with pytest.raises(RuntimeError):
+        run_training(api, mesh, pipe_b, LoopConfig(steps=10, ckpt_every=4),
+                     opt, ckpt=ckpt_b, crash_at=6)
+    pipe_c = TokenPipeline(cfg, global_batch=4, seq_len=32, seed=7)
+    resumed = run_training(api, mesh, pipe_c, LoopConfig(steps=10, ckpt_every=4),
+                           opt, ckpt=ckpt_b)
+    assert resumed.restored_from == 4
+    # the resumed tail must equal the uninterrupted run's tail exactly
+    np.testing.assert_allclose(resumed.losses, base.losses[4:], rtol=1e-5)
+
+
+def test_strict_mode_checkpoint_roundtrip(qwen_smoke):
+    cfg, api = qwen_smoke
+    device = PMDevice(size=256 * 1024 * 1024)
+    vol = Volume.format(device, GEOM)
+    store = USplit(vol, mode=Mode.STRICT, oplog_slot=0,
+                   staging_file_bytes=8 * 1024 * 1024, staging_prealloc=2,
+                   staging_background=False)
+    ckpt = CheckpointManager(store)
+    params = init_params(api.init_specs(), jax.random.PRNGKey(0))
+    tree = {"params": params}
+    ckpt.save(1, tree)
+    got = ckpt.restore(tree)
+    assert got is not None
+    step, restored, _ = got
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------- serving
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    api = build_model(cfg)
+    params = init_params(api.init_specs(), jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def test_continuous_batching_completes_all(engine_setup):
+    cfg, api, params = engine_setup
+    eng = ServingEngine(api, params, max_batch=3, max_seq=64, page_tokens=8)
+    reqs = [eng.submit([1 + i, 2, 3], max_new_tokens=4) for i in range(7)]
+    done = eng.run_until_done()
+    assert len(done) == 7
+    assert all(len(r.output) == 4 for r in done)
+
+
+def test_output_independent_of_batch_composition(engine_setup):
+    """A request's tokens must not depend on who shares the batch."""
+    cfg, api, params = engine_setup
+    prompt = [5, 6, 7, 8]
+    alone = ServingEngine(api, params, max_batch=4, max_seq=64, page_tokens=8)
+    r1 = alone.submit(prompt, max_new_tokens=5)
+    alone.run_until_done()
+    crowded = ServingEngine(api, params, max_batch=4, max_seq=64,
+                            page_tokens=8)
+    others = [crowded.submit([9, 10, 11 + i], max_new_tokens=5)
+              for i in range(3)]
+    r2 = crowded.submit(prompt, max_new_tokens=5)
+    crowded.run_until_done()
+    assert r1.output == r2.output
+
+
+def test_fork_then_divergence_safe(engine_setup):
+    cfg, api, params = engine_setup
+    eng = ServingEngine(api, params, max_batch=4, max_seq=64, page_tokens=8,
+                        greedy=False, seed=1)
+    r = eng.submit(list(range(1, 10)), max_new_tokens=8)
+    for _ in range(12):
+        eng.step()
+    child = eng.fork(r)
+    eng.run_until_done(max_steps=300)
+    assert r.done and child.done
+    assert len(r.output) == len(child.output) == 8
+
+
+def test_mamba_engine_roundtrip():
+    cfg = get_config("mamba2-1.3b", smoke=True)
+    api = build_model(cfg)
+    params = init_params(api.init_specs(), jax.random.PRNGKey(0))
+    eng = ServingEngine(api, params, max_batch=2, max_seq=32, page_tokens=8)
+    reqs = [eng.submit([1, 2, 3], max_new_tokens=3) for _ in range(3)]
+    done = eng.run_until_done()
+    assert len(done) == 3 and all(len(r.output) == 3 for r in done)

@@ -1,0 +1,95 @@
+"""Generate the data-driven tables of EXPERIMENTS.md from runs/ artifacts.
+
+    PYTHONPATH=src python tools/make_experiments.py > /tmp/tables.md
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+DT = Path("runs/dryrun")
+
+
+def load(mesh, variant_suffix=""):
+    rows = {}
+    for p in sorted(DT.glob("*.json")):
+        stem = p.stem
+        parts = stem.split("__")
+        if len(parts) < 3:
+            continue
+        arch, shape, m = parts[0], parts[1], parts[2]
+        suffix = "__".join(parts[3:])
+        if m != mesh or suffix != variant_suffix:
+            continue
+        rows[(arch, shape)] = json.loads(p.read_text())
+    return rows
+
+
+def fmt_mem(r):
+    return f"{r['memory']['peak_bytes_est'] / 2**30:.1f}"
+
+
+def roofline_table():
+    base = load("16x16")
+    print("### Single-pod (16x16 = 256 chips) baseline — all cells\n")
+    print("| arch | shape | peak GiB | compute s | memory s (HLO-UB) | "
+          "collective s | bottleneck | useful ratio | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for (arch, shape), r in sorted(base.items()):
+        if r.get("status") != "ok":
+            print(f"| {arch} | {shape} | FAIL | | | | | | |")
+            continue
+        rf = r.get("roofline")
+        if not rf:
+            print(f"| {arch} | {shape} | {fmt_mem(r)} | - | - | - | - | - | "
+                  f"{r['compile_s']:.0f} |")
+            continue
+        u = rf.get("useful_ratio")
+        print(f"| {arch} | {shape} | {fmt_mem(r)} | {rf['compute_s']:.4f} | "
+              f"{rf['memory_s']:.4f} | {rf['collective_s']:.4f} | "
+              f"{rf['bottleneck']} | {u and f'{u:.3f}' or '-'} | "
+              f"{r['compile_s']:.0f} |")
+
+
+def multipod_table():
+    rows = load("2x16x16")
+    print("\n### Multi-pod (2x16x16 = 512 chips) compile gate\n")
+    print("| arch | shape | status | peak GiB | compile s |")
+    print("|---|---|---|---|---|")
+    n_ok = 0
+    for (arch, shape), r in sorted(rows.items()):
+        ok = r.get("status") == "ok"
+        n_ok += ok
+        print(f"| {arch} | {shape} | {'ok' if ok else 'FAIL'} | "
+              f"{fmt_mem(r) if ok else '-'} | "
+              f"{r.get('compile_s', '-') if ok else r.get('error', '')[:60]} |")
+    print(f"\n{n_ok}/{len(rows)} cells compile on the 512-chip mesh.")
+
+
+def variants_table():
+    print("\n### Optimized variants (hillclimbed cells)\n")
+    print("| cell | variant | peak GiB | compute s | memory s | "
+          "collective s | wire B/chip | useful |")
+    print("|---|---|---|---|---|---|---|---|")
+    for p in sorted(DT.glob("*.json")):
+        parts = p.stem.split("__")
+        if len(parts) < 4:
+            continue
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok" or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        u = rf.get("useful_ratio")
+        print(f"| {parts[0]} x {parts[1]} ({parts[2]}) | "
+              f"{'+'.join(parts[3:])} | {fmt_mem(r)} | {rf['compute_s']:.4f} | "
+              f"{rf['memory_s']:.4f} | {rf['collective_s']:.4f} | "
+              f"{rf['wire_bytes_per_chip']:.2e} | "
+              f"{u and f'{u:.3f}' or '-'} |")
+
+
+if __name__ == "__main__":
+    roofline_table()
+    multipod_table()
+    variants_table()
