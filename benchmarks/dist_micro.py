@@ -1,0 +1,106 @@
+"""Microbenchmarks for the repro.dist substrate.
+
+Two hot paths get a perf trajectory artifact (``BENCH_dist.json``):
+
+  * int8 codec throughput — quantize/dequantize and the error-feedback
+    variant, jitted, per-element GB/s (the cross-pod reduction's cost);
+  * remesh-plan latency — the pure-Python control-plane decision, which
+    sits on the recovery critical path (worker death -> new mesh).
+
+  PYTHONPATH=src python -m benchmarks.dist_micro [--fast] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.compression import (dequantize_int8, quantize_int8,
+                                    quantize_with_feedback)
+from repro.dist.fault import plan_remesh
+
+
+def _time_jitted(fn, args, *, iters: int) -> float:
+    """Median wall seconds per call, post-warmup, outputs blocked on."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples))
+
+
+def bench_codec(n_elems: int, *, iters: int) -> dict:
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(n_elems), jnp.float32)
+    err = jnp.zeros_like(x)
+
+    quant = jax.jit(quantize_int8)
+    q, scale, pad = quant(x)
+    deq = jax.jit(lambda q, s: dequantize_int8(q, s, pad, x.shape))
+    feedback = jax.jit(quantize_with_feedback)
+
+    t_q = _time_jitted(quant, (x,), iters=iters)
+    t_d = _time_jitted(deq, (q, scale), iters=iters)
+    t_f = _time_jitted(feedback, (x, err), iters=iters)
+    nbytes = n_elems * 4
+    return {
+        "n_elems": n_elems,
+        "quantize_s": t_q, "quantize_gbps": nbytes / t_q / 1e9,
+        "dequantize_s": t_d, "dequantize_gbps": nbytes / t_d / 1e9,
+        "feedback_s": t_f, "feedback_gbps": nbytes / t_f / 1e9,
+        "wire_compression_ratio": 4.0 / (1.0 + 4.0 / 256.0),  # f32 -> int8+scales
+    }
+
+
+def bench_remesh(n_workers: int, *, iters: int) -> dict:
+    workers = list(range(n_workers))
+    t0 = time.perf_counter()
+    for i in range(iters):
+        # vary the survivor count so the shrink path is what gets timed
+        plan_remesh(workers[: n_workers - (i % 4)],
+                    chips_per_worker=16, model_axis=16)
+    dt = (time.perf_counter() - t0) / iters
+    return {"n_workers": n_workers, "plan_s": dt, "plan_us": dt * 1e6}
+
+
+def run(fast: bool = False) -> dict:
+    iters = 5 if fast else 20
+    return {
+        "bench": "dist_micro",
+        "codec": [bench_codec(n, iters=iters)
+                  for n in ((1 << 16, 1 << 20) if fast
+                            else (1 << 16, 1 << 20, 1 << 24))],
+        "remesh": [bench_remesh(n, iters=max(iters * 10, 50))
+                   for n in (16, 256, 4096)],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default="BENCH_dist.json")
+    args = ap.parse_args()
+    result = run(fast=args.fast)
+    Path(args.out).write_text(json.dumps(result, indent=2))
+    for row in result["codec"]:
+        print(f"[dist_micro] codec n={row['n_elems']}: "
+              f"quant {row['quantize_gbps']:.2f} GB/s, "
+              f"dequant {row['dequantize_gbps']:.2f} GB/s, "
+              f"feedback {row['feedback_gbps']:.2f} GB/s")
+    for row in result["remesh"]:
+        print(f"[dist_micro] remesh n_workers={row['n_workers']}: "
+              f"{row['plan_us']:.1f} us/plan")
+    print(f"[dist_micro] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@ YCSB + (if dry-run artifacts exist) the roofline digest.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from pathlib import Path
 
@@ -78,6 +79,17 @@ def main() -> None:
         row = ",".join(f"{w}={res[w]['modeled_kops']:.0f}"
                        for w in ("A", "B", "C", "D", "E", "F"))
         print(f"{kind},{row}")
+
+    print("\n== dist substrate microbenchmarks ==")
+    from . import dist_micro
+    dist = dist_micro.run(fast=args.fast)
+    Path("BENCH_dist.json").write_text(json.dumps(dist, indent=2))
+    for row in dist["codec"]:
+        print(f"codec,n={row['n_elems']},quant_gbps={row['quantize_gbps']:.2f},"
+              f"dequant_gbps={row['dequantize_gbps']:.2f}")
+    for row in dist["remesh"]:
+        print(f"remesh,n_workers={row['n_workers']},"
+              f"plan_us={row['plan_us']:.1f}")
 
     if Path("runs/dryrun").exists():
         print("\n== Roofline digest (single-pod dry-run artifacts) ==")

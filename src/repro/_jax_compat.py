@@ -1,0 +1,101 @@
+"""Forward-compatibility shims for older jax runtimes.
+
+The codebase is written against the modern jax API (``jax.set_mesh``,
+``jax.shard_map``, ``jax.sharding.AxisType``, ``jax.make_mesh(...,
+axis_types=)``); the container ships jax 0.4.37 where those live under
+older names/signatures.  ``install()`` (called from ``repro/__init__``)
+bridges the gap in-place so the same source runs on both.  Every shim is
+guarded by a feature check: on a modern jax this module is a no-op.
+"""
+
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+
+
+def install() -> None:
+    _install_axis_type()
+    _install_make_mesh()
+    _install_set_mesh()
+    _install_shard_map()
+    _install_get_abstract_mesh()
+    _install_pallas_aliases()
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    if "axis_types" in inspect.signature(jax.make_mesh).parameters:
+        return
+    orig = jax.make_mesh
+
+    def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        # 0.4.x meshes are implicitly all-Auto, which is the only mode the
+        # repo requests; Explicit/Manual would need a modern jax.
+        return orig(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = make_mesh
+
+
+def _install_set_mesh() -> None:
+    if hasattr(jax, "set_mesh"):
+        return
+
+    def set_mesh(mesh):
+        # Mesh is itself a context manager on 0.4.x, so `with
+        # jax.set_mesh(mesh):` degrades to `with mesh:`.
+        return mesh
+
+    jax.set_mesh = set_mesh
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as legacy
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=True):
+        auto = frozenset()
+        if axis_names is not None:
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        return legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=bool(check_vma), auto=auto)
+
+    jax.shard_map = shard_map
+
+
+def _install_get_abstract_mesh() -> None:
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return
+
+    def get_abstract_mesh():
+        from jax._src.mesh import thread_resources
+
+        return thread_resources.env.physical_mesh
+
+    jax.sharding.get_abstract_mesh = get_abstract_mesh
+
+
+def _install_pallas_aliases() -> None:
+    try:
+        import jax.experimental.pallas.tpu as pltpu
+    except Exception:               # pallas optional on exotic builds
+        return
+    if not hasattr(pltpu, "CompilerParams") \
+            and hasattr(pltpu, "TPUCompilerParams"):
+        # renamed upstream; the constructor kwargs we use are identical
+        pltpu.CompilerParams = pltpu.TPUCompilerParams

@@ -1,0 +1,32 @@
+"""Distribution substrate: the cluster-scale control plane.
+
+The paper's split — a fast user-space data plane with metadata/control in a
+separate trusted layer — is applied here at cluster scale:
+
+  * ``sharding``     mesh-shape-driven partition rules (the "metadata" of
+                     the distributed computation: who owns which slice);
+  * ``compression``  int8 + error-feedback gradient reduction for the slow
+                     cross-pod links (the data plane's bandwidth diet);
+  * ``fault``        heartbeat monitoring, straggler detection, and remesh
+                     planning — the control-plane decisions that the
+                     SplitFS storage plane (checkpoint restore through
+                     staging + relink) then executes.
+
+All sharding helpers take any object with a ``.shape`` mapping (a real
+``jax.sharding.Mesh`` or a shape-only stand-in), so rule logic is testable
+without 256 devices.  See DESIGN.md §9.
+"""
+
+from . import compression, fault, sharding
+from .compression import (compressed_psum, dequantize_int8, quantize_int8,
+                          quantize_with_feedback, topk_sparsify)
+from .fault import HeartbeatMonitor, RemeshPlan, plan_remesh
+from .sharding import (batch_axes, cache_specs, fit_batch_axes, serve_rules,
+                       train_rules)
+
+__all__ = [
+    "batch_axes", "cache_specs", "compressed_psum", "compression",
+    "dequantize_int8", "fault", "fit_batch_axes", "HeartbeatMonitor",
+    "plan_remesh", "quantize_int8", "quantize_with_feedback", "RemeshPlan",
+    "serve_rules", "sharding", "topk_sparsify", "train_rules",
+]

@@ -1,0 +1,132 @@
+"""Fault tolerance control plane: heartbeats, stragglers, remesh planning.
+
+The monitor is deliberately passive (pure bookkeeping, explicit ``now=``
+injection for tests); *policy* lives in the training loop, which polls
+``dead_workers`` / ``stragglers`` once per step and, on eviction, executes
+a ``RemeshPlan``: checkpoint restore through the SplitFS staging+relink
+path, pipeline reshard, deterministic resumption (tests/test_elastic.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class _WorkerState:
+    last_beat: float
+    step: int = -1
+    step_time: float = 0.0
+    slow_polls: int = 0
+
+
+class HeartbeatMonitor:
+    """Tracks per-worker liveness and step rate.
+
+    * a worker is **dead** when its last heartbeat is older than
+      ``timeout_s``;
+    * a worker is a **straggler** when its step time exceeds
+      ``straggler_factor`` x the alive-set median for ``patience``
+      consecutive polls (one poll per training step); it stays flagged
+      while it remains slow.
+    """
+
+    def __init__(self, workers: Sequence[int], *, timeout_s: float = 60.0,
+                 patience: int = 3, straggler_factor: float = 2.0) -> None:
+        now = time.monotonic()
+        self.timeout_s = timeout_s
+        self.patience = patience
+        self.straggler_factor = straggler_factor
+        self._state: Dict[int, _WorkerState] = {
+            w: _WorkerState(last_beat=now) for w in workers}
+        self._alive = set(workers)
+        self._flagged: set = set()
+
+    # ------------------------------------------------------------ heartbeats
+
+    def beat(self, worker: int, step: int, step_time: float,
+             *, now: Optional[float] = None) -> None:
+        if worker not in self._state:
+            raise KeyError(f"unknown worker {worker}")
+        st = self._state[worker]
+        st.last_beat = time.monotonic() if now is None else now
+        st.step = step
+        st.step_time = step_time
+
+    def dead_workers(self, *, now: Optional[float] = None) -> List[int]:
+        """Alive workers whose heartbeat has timed out."""
+        t = time.monotonic() if now is None else now
+        return sorted(w for w in self._alive
+                      if t - self._state[w].last_beat > self.timeout_s)
+
+    def mark_dead(self, worker: int) -> None:
+        self._alive.discard(worker)
+        self._flagged.discard(worker)
+
+    def alive_workers(self) -> List[int]:
+        return sorted(self._alive)
+
+    # ------------------------------------------------------------ stragglers
+
+    def stragglers(self) -> List[int]:
+        """Poll once per step: workers ``patience`` consecutive slow polls
+        behind the alive-set median step time."""
+        rates = [self._state[w].step_time for w in self._alive
+                 if self._state[w].step >= 0]
+        if len(rates) < 2:
+            return []
+        median = statistics.median(rates)
+        for w in sorted(self._alive):
+            st = self._state[w]
+            if st.step >= 0 and st.step_time > self.straggler_factor * median:
+                st.slow_polls += 1
+                if st.slow_polls >= self.patience:
+                    self._flagged.add(w)
+            else:
+                st.slow_polls = 0
+                self._flagged.discard(w)
+        return sorted(self._flagged)
+
+
+# ---------------------------------------------------------------- remesh
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    """The control-plane output the survivors execute in lockstep."""
+    mesh_shape: Tuple[int, ...]              # (data, model) or (pod, data, model)
+    survivors: Tuple[int, ...]
+    data_shard_of: Dict[int, int]            # worker id -> data-shard index
+    restore_step: Optional[int] = None
+
+
+def plan_remesh(alive: Sequence[int], *, chips_per_worker: int,
+                model_axis: int, pod_axis: int = 1,
+                restore_step: Optional[int] = None) -> RemeshPlan:
+    """Shrink the data axis onto the surviving workers.
+
+    The model (and pod) axes are load-bearing — parameters are laid out
+    over them — so elasticity happens on the data axis only: total chips
+    must factor as ``pod_axis * data * model_axis`` with ``data >= 1``,
+    else the geometry is infeasible and we raise instead of guessing.
+    """
+    survivors = tuple(sorted(set(alive)))
+    total = len(survivors) * chips_per_worker
+    denom = model_axis * pod_axis
+    if model_axis < 1 or pod_axis < 1 or chips_per_worker < 1:
+        raise ValueError("axes and chips_per_worker must be positive")
+    if total < denom or total % denom != 0:
+        raise ValueError(
+            f"{len(survivors)} workers x {chips_per_worker} chips = {total} "
+            f"chips cannot form a (pod={pod_axis}, data, model={model_axis}) "
+            "mesh")
+    data = total // denom
+    mesh_shape = (pod_axis, data, model_axis) if pod_axis > 1 \
+        else (data, model_axis)
+    return RemeshPlan(
+        mesh_shape=mesh_shape, survivors=survivors,
+        data_shard_of={w: i for i, w in enumerate(survivors)},
+        restore_step=restore_step)

@@ -1,0 +1,119 @@
+"""Mesh-shape-driven partition rules.
+
+Rules map the models' *logical* axis names (declared on every ParamSpec)
+to mesh axes; ``models/spec.py::spec_for`` applies them with divisibility
+fallback (a dim that does not divide its mesh axis stays replicated) and
+the consume-each-mesh-axis-once GSPMD requirement.  Everything here is a
+pure function of ``mesh.shape`` — a mapping of axis name to size — so a
+shape-only stand-in works and no devices are touched at import time.
+
+Axis semantics (launch/mesh.py): "data" = DP/FSDP, "model" = TP/EP,
+"pod" = cross-pod DP (the slow axis, optionally int8-compressed).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# Order matters: "pod" is the outermost (slowest) axis, so it comes first
+# in every batch spec — matching the physical topology.
+_BATCH_AXIS_ORDER = ("pod", "data")
+
+# Logical axes that carry tensor parallelism.  "kv" is listed even though
+# GQA kv-head dims rarely divide the TP axis — spec_for's fallback
+# replicates them, which is exactly the MaxText behavior.
+_TP_AXES = ("heads", "kv", "ffn", "expert", "vocab")
+
+
+def train_rules(mesh: Any, *, include_pod_in_fsdp: bool = True) -> Dict:
+    """FSDP over data (and pod, unless the pod axis is handled manually by
+    the compressed-reduction shard_map) + TP over model.
+
+    The contraction dim ("embed") carries FSDP so GSPMD inserts the
+    layer-wise all-gathers inside the layer scan, overlapping them with
+    compute; TP axes shard the per-layer parallel dims.
+    """
+    shape = mesh.shape
+    fsdp = tuple(a for a in _BATCH_AXIS_ORDER
+                 if a in shape and (a != "pod" or include_pod_in_fsdp))
+    fsdp_rule: Any = fsdp[0] if len(fsdp) == 1 else (fsdp or None)
+    model = "model" if "model" in shape else None
+    rules: Dict = {"embed": fsdp_rule, "embed_tbl": fsdp_rule}
+    rules.update({ax: model for ax in _TP_AXES})
+    return rules
+
+
+def serve_rules(mesh: Any) -> Dict:
+    """Serving shards parameters over "model" only (TP/EP); the batch axes
+    stay free for request parallelism — required by the shard_map serve
+    variant, whose manual region sees params replicated across batch axes."""
+    model = "model" if "model" in mesh.shape else None
+    return {ax: model for ax in _TP_AXES}
+
+
+def batch_axes(mesh: Any) -> Tuple[str, ...]:
+    """All batch-capable mesh axes, outermost first."""
+    return tuple(a for a in _BATCH_AXIS_ORDER if a in mesh.shape)
+
+
+def fit_batch_axes(mesh: Any, batch: int) -> Tuple[str, ...]:
+    """The largest subset of the batch axes (in topology order) whose
+    product divides ``batch``; axes that don't fit are dropped, e.g.
+    ``fit_batch_axes({pod:2, data:16, model:16}, 2) == ("pod",)`` and a
+    batch of 1 shards nowhere."""
+    axes = []
+    span = 1
+    for a in batch_axes(mesh):
+        size = mesh.shape[a]
+        if size > 1 and batch % (span * size) != 0:
+            continue
+        axes.append(a)
+        span *= size
+    return tuple(axes)
+
+
+def cache_specs(mesh: Any, caches_like: Any) -> Any:
+    """PartitionSpecs for a paged-KV cache pytree (lm / encdec layouts).
+
+    * KV pools (``*_attn`` tuples, encdec ``pools``/``cross_*``): the page
+      (or batch, for cross K/V — same dim position) dim shards over the
+      batch axes so each data shard owns a contiguous page block
+      (U-Split-style private chains); the kv-head dim takes "model" when
+      divisible, else stays replicated.
+    * Everything else (page_table, lengths, recurrent/SSM state) shards
+      its batch dim over the batch axes.
+
+    Leaves under ``group``/``pools``/``cross_*`` carry a leading
+    stacked-layer dim which always stays replicated.
+    """
+    batch = int(caches_like["lengths"].shape[0]) if "lengths" in caches_like \
+        else 0
+    ba = fit_batch_axes(mesh, batch) if batch else ()
+    span = 1
+    for a in ba:
+        span *= mesh.shape[a]
+    model_size = mesh.shape.get("model", 1)
+
+    def one(path, leaf) -> P:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        stacked = name.startswith(("group", "pools", "cross"))
+        base = 1 if stacked else 0          # dim after the layer-stack dim
+        if not hasattr(leaf, "ndim") or leaf.ndim <= base:
+            return P()
+        spec = [None] * leaf.ndim
+        if ba and leaf.shape[base] % span == 0:
+            spec[base] = ba if len(ba) > 1 else ba[0]
+        is_pool = "_attn" in name or name.startswith(("pools", "cross"))
+        if is_pool and leaf.ndim >= base + 3:
+            kv_dim = leaf.ndim - 2          # (.., page_tokens|seq, KV, hd)
+            if model_size > 1 and leaf.shape[kv_dim] % model_size == 0:
+                spec[kv_dim] = "model"
+        while spec and spec[-1] is None:
+            spec.pop()
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, caches_like)

@@ -1,13 +1,19 @@
 import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=512").strip()
+import sys
+
+if __name__ == "__main__" and "--smoke" not in sys.argv:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=512").strip()
 
 """Multi-pod dry-run: lower + compile every (architecture x input shape)
 cell on the production mesh and record memory / cost / collective analysis.
 
-The two lines above MUST precede every other import (jax locks the device
-count on first init) — this module is the ONLY place the 512 placeholder
-devices exist; tests and benches see 1 CPU device.
+The lines above MUST precede every other import (jax locks the device
+count on first init) — the 512 placeholder devices exist ONLY when this
+module is the entry point (never on plain import, so tests and benches
+see 1 CPU device), and not in ``--smoke`` mode, which lowers smoke-scale
+configs on the real host mesh as a fast CI gate.
 
 Roofline measurement methodology (EXPERIMENTS.md §Roofline): XLA's cost
 analysis counts while-loop bodies ONCE, so scanned-over-layers programs are
@@ -41,10 +47,23 @@ from ..scan_util import unroll_scans
 from ..train.optimizer import AdamWConfig
 from ..train.step import make_train_step
 from .hlo_analysis import analyze_collectives, model_flops_for, roofline_terms
-from .mesh import make_production_mesh
+from .mesh import make_host_mesh, make_production_mesh
 from .specs import abstract_state, decode_specs, train_batch_specs
 
 SHAPE_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+
+def _cost_analysis(compiled) -> dict:
+    """Older jax returns a list of per-computation dicts; normalize."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def _smoke_shape(shape):
+    return dataclasses.replace(shape, seq_len=min(shape.seq_len, 64),
+                               global_batch=min(shape.global_batch, 4))
 
 
 def _scaled_cfg(cfg, mult: int):
@@ -137,7 +156,7 @@ def measure_cell(cfg, shape, mesh, *, serve_impl: str, page_tokens: int,
                                     microbatches=microbatches,
                                     serve_dtype=serve_dtype)
             compiled = lowered.compile()
-        ca = compiled.cost_analysis() or {}
+        ca = _cost_analysis(compiled)
         coll = analyze_collectives(compiled.as_text())
         points[mult] = {
             "flops": float(ca.get("flops", 0.0)),
@@ -171,17 +190,30 @@ def measure_cell(cfg, shape, mesh, *, serve_impl: str, page_tokens: int,
 def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                serve_impl: str = "gspmd", page_tokens: int = 128,
                microbatches: int = 1, remat=None, measure: bool = False,
-               serve_dtype: str = "f32", compress: bool = False):
-    """Lower + compile one cell; returns (record dict, compiled)."""
+               serve_dtype: str = "f32", compress: bool = False,
+               smoke: bool = False):
+    """Lower + compile one cell; returns (record dict, compiled).
+
+    ``smoke=True`` is the CI gate: the smoke-scale config, a shrunken
+    shape, and whatever mesh this host actually has (``multi_pod`` does
+    not apply) — exercises the same serve_rules/cache_specs/train_rules
+    plumbing in seconds."""
     cfg = get_config(arch)
-    if remat is not None:
-        cfg = dataclasses.replace(cfg, remat=remat)
     shape = SHAPE_BY_NAME[shape_name]
     if shape not in shapes_for(cfg):
         raise ValueError(f"{arch} skips {shape_name} (see DESIGN.md §6)")
-    mesh = make_production_mesh(multi_pod=multi_pod)
-    record = {"arch": arch, "shape": shape_name,
-              "mesh": "2x16x16" if multi_pod else "16x16",
+    if smoke:
+        cfg = get_config(arch, smoke=True)
+        shape = _smoke_shape(shape)
+        page_tokens = min(page_tokens, 16)
+        mesh = make_host_mesh()
+        mesh_tag = "host1x" + str(len(jax.devices()))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_tag = "2x16x16" if multi_pod else "16x16"
+    if remat is not None:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
               "kind": shape.kind, "serve_impl": serve_impl}
 
     with jax.set_mesh(mesh):
@@ -196,7 +228,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         t_compile = time.monotonic() - t0
 
         ma = compiled.memory_analysis()
-        ca = compiled.cost_analysis() or {}
+        ca = _cost_analysis(compiled)
         coll_raw = analyze_collectives(compiled.as_text())
         record.update({
             "lower_s": round(t_lower, 2),
@@ -232,11 +264,11 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 def run_cells(cells, *, multi_pod: bool, serve_impl: str, out_dir: Path,
               page_tokens: int = 128, measure: bool = False,
               microbatches: int = 1, serve_dtype: str = "f32",
-              compress: bool = False):
+              compress: bool = False, smoke: bool = False):
     out_dir.mkdir(parents=True, exist_ok=True)
     results = []
     for arch, shape_name in cells:
-        mesh_tag = "2x16x16" if multi_pod else "16x16"
+        mesh_tag = "smoke" if smoke else ("2x16x16" if multi_pod else "16x16")
         tag = f"{arch}__{shape_name}__{mesh_tag}"
         if serve_impl != "gspmd":
             tag += f"__{serve_impl}"
@@ -251,7 +283,7 @@ def run_cells(cells, *, multi_pod: bool, serve_impl: str, out_dir: Path,
                                    page_tokens=page_tokens, measure=measure,
                                    microbatches=microbatches,
                                    serve_dtype=serve_dtype,
-                                   compress=compress)
+                                   compress=compress, smoke=smoke)
             record["status"] = "ok"
             extra = ""
             if "roofline" in record:
@@ -285,6 +317,8 @@ def main() -> None:
     ap.add_argument("--serve-dtype", default="f32", choices=["f32", "bf16"])
     ap.add_argument("--compress", action="store_true",
                     help="int8 pod-axis gradient compression (opt-in)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smoke configs on the real host mesh (CI gate)")
     ap.add_argument("--out", default="runs/dryrun")
     args = ap.parse_args()
 
@@ -298,7 +332,8 @@ def main() -> None:
                         serve_impl=args.serve_impl, out_dir=Path(args.out),
                         page_tokens=args.page_tokens, measure=args.measure,
                         microbatches=args.microbatches,
-                        serve_dtype=args.serve_dtype, compress=args.compress)
+                        serve_dtype=args.serve_dtype, compress=args.compress,
+                        smoke=args.smoke)
     n_ok = sum(1 for r in results if r.get("status") == "ok")
     print(f"[dryrun] {n_ok}/{len(results)} cells OK")
     if n_ok < len(results):

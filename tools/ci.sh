@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: full test suite + dry-run smoke cells + fast benchmarks.
+#
+#   bash tools/ci.sh          # tests + dryrun smoke
+#   bash tools/ci.sh --bench  # also the fast benchmark pass
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== dryrun smoke: train + decode cells on the host mesh =="
+python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k \
+    --smoke --out runs/ci-dryrun
+python -m repro.launch.dryrun --arch qwen2-1.5b --shape decode_32k \
+    --smoke --out runs/ci-dryrun
+python -m repro.launch.dryrun --arch mamba2-1.3b --shape decode_32k \
+    --smoke --out runs/ci-dryrun
+
+if [[ "${1:-}" == "--bench" ]]; then
+    echo "== benchmarks (fast) =="
+    python -m benchmarks.run --fast
+fi
+
+echo "CI green"
