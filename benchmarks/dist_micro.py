@@ -1,11 +1,16 @@
 """Microbenchmarks for the repro.dist substrate.
 
-Two hot paths get a perf trajectory artifact (``BENCH_dist.json``):
+Four hot paths get a perf trajectory artifact (``BENCH_dist.json``):
 
   * int8 codec throughput — quantize/dequantize and the error-feedback
     variant, jitted, per-element GB/s (the cross-pod reduction's cost);
+  * bucketed reduction throughput — the real per-layer bucketed
+    ``bucketed_compressed_psum`` path (int8 and topk codecs) inside a
+    shard_map manual region, GB/s over the whole gradient tree;
   * remesh-plan latency — the pure-Python control-plane decision, which
-    sits on the recovery critical path (worker death -> new mesh).
+    sits on the recovery critical path (worker death -> new mesh);
+  * steal-vs-remesh latency — the straggler escalation ladder's cheap
+    first rung (``plan_steal``) against the full fallback, per decision.
 
   PYTHONPATH=src python -m benchmarks.dist_micro [--fast] [--out PATH]
 """
@@ -20,10 +25,12 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
-from repro.dist.compression import (dequantize_int8, quantize_int8,
-                                    quantize_with_feedback)
-from repro.dist.fault import plan_remesh
+from repro.dist.compression import (bucketed_compressed_psum,
+                                    dequantize_int8, plan_buckets,
+                                    quantize_int8, quantize_with_feedback)
+from repro.dist.fault import plan_remesh, plan_steal
 
 
 def _time_jitted(fn, args, *, iters: int) -> float:
@@ -61,6 +68,37 @@ def bench_codec(n_elems: int, *, iters: int) -> dict:
     }
 
 
+def bench_bucketed(n_leaves: int, leaf_elems: int, bucket_elems: int, *,
+                   codec: str, iters: int) -> dict:
+    """The real reduction path: per-layer bucketed compressed psum over a
+    synthetic gradient tree, inside shard_map manual over a 1-sized pod
+    axis (collective semantics, zero wire on the host — the codec math is
+    what's timed)."""
+    rng = np.random.default_rng(1)
+    tree = [jnp.asarray(rng.standard_normal(leaf_elems), jnp.float32)
+            for _ in range(n_leaves)]
+    plan = plan_buckets([leaf_elems] * n_leaves, bucket_elems=bucket_elems)
+    errs = [jnp.zeros((n,), jnp.float32) for n in plan.padded_sizes]
+    mesh = jax.make_mesh((1,), ("pod",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    def reduce_tree(tree, errs):
+        return bucketed_compressed_psum(tree, errs, "pod", plan=plan,
+                                        codec=codec)
+
+    fn = jax.jit(jax.shard_map(reduce_tree, mesh=mesh,
+                               in_specs=(P(), P("pod")),
+                               out_specs=(P(), P("pod")),
+                               axis_names={"pod"}, check_vma=False))
+    t = _time_jitted(fn, (tree, errs), iters=iters)
+    nbytes = n_leaves * leaf_elems * 4
+    return {
+        "codec": codec, "n_leaves": n_leaves, "leaf_elems": leaf_elems,
+        "bucket_elems": bucket_elems, "n_buckets": plan.num_buckets,
+        "reduce_s": t, "reduce_gbps": nbytes / t / 1e9,
+    }
+
+
 def bench_remesh(n_workers: int, *, iters: int) -> dict:
     workers = list(range(n_workers))
     t0 = time.perf_counter()
@@ -72,15 +110,46 @@ def bench_remesh(n_workers: int, *, iters: int) -> dict:
     return {"n_workers": n_workers, "plan_s": dt, "plan_us": dt * 1e6}
 
 
+def bench_steal(n_workers: int, *, iters: int) -> dict:
+    """Steal-vs-remesh: per-decision latency of the escalation ladder's two
+    rungs for the same straggler event."""
+    assignment = {w: w for w in range(n_workers)}
+    spares = [n_workers + i for i in range(4)]
+    t0 = time.perf_counter()
+    for i in range(iters):
+        plan_steal(assignment, i % n_workers, spares)
+    t_steal = (time.perf_counter() - t0) / iters
+    workers = list(range(n_workers))
+    t0 = time.perf_counter()
+    for i in range(iters):
+        plan_remesh(workers[: n_workers - 1 - (i % 4)],
+                    chips_per_worker=16, model_axis=16)
+    t_remesh = (time.perf_counter() - t0) / iters
+    return {"n_workers": n_workers,
+            "steal_us": t_steal * 1e6, "remesh_us": t_remesh * 1e6,
+            "remesh_over_steal": t_remesh / max(t_steal, 1e-12)}
+
+
 def run(fast: bool = False) -> dict:
     iters = 5 if fast else 20
+    # (n_leaves, leaf_elems, bucket_elems, codecs); host top_k is slow, so
+    # the large cell prices the int8 codec only
+    bucketed_cells = [(16, 1 << 14, 1 << 16, ("int8", "topk")),
+                      (16, 1 << 16, 1 << 18, ("int8", "topk"))]
+    if not fast:
+        bucketed_cells.append((64, 1 << 18, 1 << 22, ("int8",)))
     return {
         "bench": "dist_micro",
         "codec": [bench_codec(n, iters=iters)
                   for n in ((1 << 16, 1 << 20) if fast
                             else (1 << 16, 1 << 20, 1 << 24))],
+        "bucketed": [bench_bucketed(nl, le, be, codec=codec, iters=iters)
+                     for (nl, le, be, codecs) in bucketed_cells
+                     for codec in codecs],
         "remesh": [bench_remesh(n, iters=max(iters * 10, 50))
                    for n in (16, 256, 4096)],
+        "steal": [bench_steal(n, iters=max(iters * 10, 50))
+                  for n in (16, 256, 4096)],
     }
 
 
@@ -96,9 +165,18 @@ def main() -> None:
               f"quant {row['quantize_gbps']:.2f} GB/s, "
               f"dequant {row['dequantize_gbps']:.2f} GB/s, "
               f"feedback {row['feedback_gbps']:.2f} GB/s")
+    for row in result["bucketed"]:
+        print(f"[dist_micro] bucketed {row['codec']} "
+              f"leaves={row['n_leaves']}x{row['leaf_elems']} "
+              f"buckets={row['n_buckets']}: {row['reduce_gbps']:.2f} GB/s")
     for row in result["remesh"]:
         print(f"[dist_micro] remesh n_workers={row['n_workers']}: "
               f"{row['plan_us']:.1f} us/plan")
+    for row in result["steal"]:
+        print(f"[dist_micro] steal n_workers={row['n_workers']}: "
+              f"{row['steal_us']:.1f} us/steal vs "
+              f"{row['remesh_us']:.1f} us/remesh "
+              f"({row['remesh_over_steal']:.1f}x)")
     print(f"[dist_micro] wrote {args.out}")
 
 

@@ -18,15 +18,20 @@ without 256 devices.  See DESIGN.md §9.
 """
 
 from . import compression, fault, sharding
-from .compression import (compressed_psum, dequantize_int8, quantize_int8,
-                          quantize_with_feedback, topk_sparsify)
-from .fault import HeartbeatMonitor, RemeshPlan, plan_remesh
-from .sharding import (batch_axes, cache_specs, fit_batch_axes, serve_rules,
-                       train_rules)
+from .compression import (BucketPlan, bucketed_compressed_psum,
+                          compressed_psum, dequantize_int8, init_residuals,
+                          plan_buckets, quantize_int8,
+                          quantize_with_feedback, topk_psum, topk_sparsify)
+from .fault import (FaultPolicy, HeartbeatMonitor, RemeshPlan, StealPlan,
+                    plan_remesh, plan_steal)
+from .sharding import (batch_axes, cache_specs, fit_batch_axes,
+                       residual_spec, serve_rules, train_rules)
 
 __all__ = [
-    "batch_axes", "cache_specs", "compressed_psum", "compression",
-    "dequantize_int8", "fault", "fit_batch_axes", "HeartbeatMonitor",
-    "plan_remesh", "quantize_int8", "quantize_with_feedback", "RemeshPlan",
-    "serve_rules", "sharding", "topk_sparsify", "train_rules",
+    "batch_axes", "BucketPlan", "bucketed_compressed_psum", "cache_specs",
+    "compressed_psum", "compression", "dequantize_int8", "fault",
+    "FaultPolicy", "fit_batch_axes", "HeartbeatMonitor", "init_residuals",
+    "plan_buckets", "plan_remesh", "plan_steal", "quantize_int8",
+    "quantize_with_feedback", "RemeshPlan", "residual_spec", "serve_rules",
+    "sharding", "StealPlan", "topk_psum", "topk_sparsify", "train_rules",
 ]

@@ -5,19 +5,39 @@ gets its own scale (max-abs / 127), the quantization residual is carried
 in a persistent accumulator and re-injected into the next step's update,
 so the *sum* of applied updates tracks the true sum (unbiased over time).
 ``topk_sparsify`` is the magnitude-sparsification alternative for even
-slower links.  All ops are shape-static jnp code, jit-able and usable
-inside shard_map manual regions.
+slower links; ``topk_psum`` puts it on the same error-feedback reduction
+path as the int8 codec.
+
+``plan_buckets`` / ``bucketed_compressed_psum`` split a gradient pytree
+into size-capped buckets (leaves stay in flatten order, i.e. layer-major)
+and launch one compressed reduction per bucket, so the pod-axis
+collectives pipeline against each other and against the backward compute
+instead of serializing behind one whole-model flatten.  Each bucket
+carries its *own* error-feedback residual; residual state therefore is a
+list of flat buffers, one per bucket, and must be sharded per pod by the
+caller (see train/step.py — out_spec ``P()`` would collapse the per-pod
+accumulators to one pod's copy and break the telescoping guarantee).
+
+All ops are shape-static jnp code, jit-able and usable inside shard_map
+manual regions.
 """
 
 from __future__ import annotations
 
-from typing import Tuple
+import dataclasses
+from typing import Any, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 BLOCK = 256
 _QMAX = 127.0
+
+# 4 Mi elements = 16 MiB of f32 per bucket: large enough to amortize the
+# collective launch, small enough that ~tens of buckets exist to overlap.
+DEFAULT_BUCKET_ELEMS = 1 << 22
+
+CODECS = ("int8", "topk")
 
 
 def _pad_amount(n: int, block: int = BLOCK) -> int:
@@ -92,3 +112,131 @@ def topk_sparsify(x: jnp.ndarray, frac: float
     thresh = jax.lax.top_k(flat, k)[0][-1]
     mask = jnp.abs(x) >= thresh
     return x * mask, mask
+
+
+def topk_psum(flat: jnp.ndarray, err: jnp.ndarray, axis_name: str, *,
+              frac: float = 0.01) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean-reduce ``flat`` across ``axis_name`` through the top-k codec
+    with error feedback: sparsify ``flat + err``, keep the dropped mass as
+    the new residual.  ``reduced + pmean(new_err) == pmean(flat + err)``
+    holds *exactly* (dropping an entry is exact in floating point), so the
+    telescoping guarantee is tighter than int8's rounding bound.  The wire
+    carries ~``frac`` (value, index) pairs per element; the host simulation
+    pmean runs dense — the sparse format is what the roofline model prices.
+    """
+    x = flat.astype(jnp.float32) + err.astype(jnp.float32)
+    vals, _ = topk_sparsify(x, frac)
+    new_err = x - vals
+    return jax.lax.pmean(vals, axis_name), new_err
+
+
+# ---------------------------------------------------------------- bucketing
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Static partition of a pytree's leaves into size-capped buckets.
+
+    ``groups[b]`` are the (contiguous, flatten-order) leaf indices in
+    bucket ``b``; ``sizes[b]`` is the unpadded element count and
+    ``padded_sizes[b]`` rounds it up to a whole number of codec blocks.
+    Everything is a Python int, fixed at trace time.
+    """
+    groups: Tuple[Tuple[int, ...], ...]
+    sizes: Tuple[int, ...]
+    padded_sizes: Tuple[int, ...]
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self.groups)
+
+
+def plan_buckets(leaf_sizes: Sequence[int], *,
+                 bucket_elems: int = DEFAULT_BUCKET_ELEMS,
+                 block: int = BLOCK) -> BucketPlan:
+    """Greedy contiguous packing: walk the leaves in flatten order (the
+    layer scan emits stacked-layer leaves, so this is per-layer-group
+    order) and close a bucket when adding the next leaf would exceed
+    ``bucket_elems``.  A single leaf larger than the cap gets a bucket of
+    its own — leaves are never split, so unbucketing is a pure reshape.
+    """
+    if bucket_elems < 1:
+        raise ValueError(f"bucket_elems must be >= 1, got {bucket_elems}")
+    groups: List[Tuple[int, ...]] = []
+    sizes: List[int] = []
+    cur: List[int] = []
+    cur_size = 0
+    for i, n in enumerate(leaf_sizes):
+        if cur and cur_size + int(n) > bucket_elems:
+            groups.append(tuple(cur))
+            sizes.append(cur_size)
+            cur, cur_size = [], 0
+        cur.append(i)
+        cur_size += int(n)
+    if cur:
+        groups.append(tuple(cur))
+        sizes.append(cur_size)
+    padded = tuple(s + _pad_amount(s, block) for s in sizes)
+    return BucketPlan(groups=tuple(groups), sizes=tuple(sizes),
+                      padded_sizes=padded)
+
+
+def init_residuals(plan: BucketPlan, *, pod_size: int = 1
+                   ) -> List[jnp.ndarray]:
+    """Zero error-feedback buffers, one per bucket.  ``pod_size > 1``
+    returns the *global* view (one residual row per pod, concatenated on
+    dim 0) for callers outside the shard_map manual region."""
+    return [jnp.zeros((pod_size * n,), jnp.float32)
+            for n in plan.padded_sizes]
+
+
+def _reduce_one(flat: jnp.ndarray, err: jnp.ndarray, axis_name: str, *,
+                codec: str, topk_frac: float
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if codec == "int8":
+        return compressed_psum(flat, err, axis_name)
+    if codec == "topk":
+        return topk_psum(flat, err, axis_name, frac=topk_frac)
+    raise ValueError(f"unknown codec {codec!r}; expected one of {CODECS}")
+
+
+def bucketed_compressed_psum(tree: Any, residuals: Sequence[jnp.ndarray],
+                             axis_name: str, *, plan: BucketPlan,
+                             codec: str = "int8", topk_frac: float = 0.01
+                             ) -> Tuple[Any, List[jnp.ndarray]]:
+    """Per-bucket compressed mean-reduction of a gradient pytree.
+
+    Each bucket is concatenated into one flat f32 vector (zero-padded to
+    whole codec blocks), reduced across ``axis_name`` through the selected
+    codec with its own persistent residual, and scattered back to the
+    original leaf shapes/dtypes.  Emitting one collective per bucket lets
+    XLA pipeline bucket ``b``'s psum against bucket ``b+1``'s quantize and
+    against backward compute — the whole-model single-bucket flatten
+    serialized all of it behind the last layer's gradient.
+
+    Returns ``(reduced_tree, new_residuals)``; ``residuals`` must match
+    ``plan`` (see ``init_residuals``) and stay sharded per pod.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    if len(residuals) != plan.num_buckets:
+        raise ValueError(f"got {len(residuals)} residuals for "
+                         f"{plan.num_buckets} buckets")
+    new_leaves: List[Any] = [None] * len(leaves)
+    new_residuals: List[jnp.ndarray] = []
+    for b, group in enumerate(plan.groups):
+        parts = [jnp.ravel(leaves[i]).astype(jnp.float32) for i in group]
+        flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        pad = plan.padded_sizes[b] - plan.sizes[b]
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        reduced, new_err = _reduce_one(flat, residuals[b], axis_name,
+                                       codec=codec, topk_frac=topk_frac)
+        new_residuals.append(new_err)
+        off = 0
+        for i in group:
+            leaf = leaves[i]
+            n = int(leaf.size) if hasattr(leaf, "size") else 1
+            seg = jax.lax.dynamic_slice_in_dim(reduced, off, n, 0)
+            new_leaves[i] = seg.reshape(jnp.shape(leaf)).astype(leaf.dtype)
+            off += n
+    return treedef.unflatten(new_leaves), new_residuals

@@ -1,10 +1,21 @@
-"""Fault tolerance control plane: heartbeats, stragglers, remesh planning.
+"""Fault tolerance control plane: heartbeats, stragglers, work stealing,
+remesh planning.
 
 The monitor is deliberately passive (pure bookkeeping, explicit ``now=``
-injection for tests); *policy* lives in the training loop, which polls
-``dead_workers`` / ``stragglers`` once per step and, on eviction, executes
-a ``RemeshPlan``: checkpoint restore through the SplitFS staging+relink
-path, pipeline reshard, deterministic resumption (tests/test_elastic.py).
+injection for tests); *policy* lives in ``FaultPolicy``, which the
+training loop polls once per step.  Mitigation is an escalation ladder:
+
+  * **straggler** -> ``plan_steal``: its data shard moves to an idle spare
+    worker.  The mesh shape is untouched — no restore, no recompile, no
+    lockstep barrier; the spare steps into the straggler's shard index and
+    the (deterministic) TokenPipeline replays that shard from the current
+    step.  This is the SplitFS move: fix the slow participant off the
+    critical path with a metadata-only reassignment (a relink of the
+    shard->worker mapping) instead of a stop-the-world rebuild.
+  * **confirmed death** (heartbeat timeout) -> ``plan_remesh``: shrink the
+    data axis onto the survivors, checkpoint restore through the SplitFS
+    staging+relink path, pipeline reshard, deterministic resumption
+    (tests/test_elastic.py).
 """
 
 from __future__ import annotations
@@ -89,6 +100,118 @@ class HeartbeatMonitor:
                 st.slow_polls = 0
                 self._flagged.discard(w)
         return sorted(self._flagged)
+
+
+# ---------------------------------------------------------------- stealing
+
+
+@dataclasses.dataclass(frozen=True)
+class StealPlan:
+    """Metadata-only mitigation: ``spare`` takes over ``straggler``'s data
+    shard; mesh shape and every other worker's assignment are unchanged."""
+    straggler: int
+    spare: int
+    shard: int                               # the data-shard index that moved
+    data_shard_of: Dict[int, int]            # post-steal assignment
+
+
+def plan_steal(assignment: Dict[int, int], straggler: int,
+               spares: Sequence[int]) -> Optional[StealPlan]:
+    """Move ``straggler``'s data shard to the first idle spare.
+
+    Unlike ``plan_remesh`` this never changes the mesh shape — the spare
+    simply steps into the straggler's shard index, so survivors keep their
+    compiled step and their pipeline position; only the spare has to replay
+    the stolen shard (exact, because TokenPipeline batches are pure
+    functions of (seed, shard, step)).  Returns ``None`` when the
+    straggler owns no shard or no spare is free — the caller keeps the
+    straggler flagged and escalates to ``plan_remesh`` only on confirmed
+    death.
+    """
+    if straggler not in assignment:
+        return None
+    free = sorted(s for s in spares
+                  if s not in assignment and s != straggler)
+    if not free:
+        return None
+    spare = free[0]
+    shard = assignment[straggler]
+    new_assignment = {w: s for w, s in assignment.items() if w != straggler}
+    new_assignment[spare] = shard
+    return StealPlan(straggler=straggler, spare=spare, shard=shard,
+                     data_shard_of=new_assignment)
+
+
+class FaultPolicy:
+    """The escalation ladder, polled once per training step.
+
+    Owns the mutable control-plane state the passive ``HeartbeatMonitor``
+    deliberately does not: the shard->worker ``assignment``, the idle
+    ``spares`` pool, and the mesh geometry needed for the remesh fallback.
+    ``poll`` returns at most one plan per call (control-plane actions are
+    serialized, like oplog entries):
+
+      * ``StealPlan``  — a flagged straggler had a shard and a spare was
+        free; the assignment has already been updated.
+      * ``RemeshPlan`` — a shard-owning worker is confirmed dead (or a
+        straggler could not be mitigated and then died); survivors must
+        restore + reshard.
+      * ``None``       — nothing to do.
+    """
+
+    def __init__(self, monitor: HeartbeatMonitor, *,
+                 assignment: Dict[int, int], spares: Sequence[int] = (),
+                 chips_per_worker: int, model_axis: int,
+                 pod_axis: int = 1) -> None:
+        self.monitor = monitor
+        self.assignment = dict(assignment)
+        self.spares = sorted(spares)
+        self.chips_per_worker = chips_per_worker
+        self.model_axis = model_axis
+        self.pod_axis = pod_axis
+        self._mitigated: set = set()          # stragglers already stolen from
+
+    def poll(self, *, now: Optional[float] = None,
+             restore_step: Optional[int] = None):
+        # confirmed deaths first: they invalidate any pending steal
+        dead = self.monitor.dead_workers(now=now)
+        if dead:
+            for w in dead:
+                self.monitor.mark_dead(w)
+                self.spares = [s for s in self.spares if s != w]
+                self._mitigated.discard(w)
+            lost_shards = any(w in self.assignment for w in dead)
+            for w in dead:
+                self.assignment.pop(w, None)
+            if lost_shards:
+                plan = plan_remesh(sorted(self.assignment),
+                                   chips_per_worker=self.chips_per_worker,
+                                   model_axis=self.model_axis,
+                                   pod_axis=self.pod_axis,
+                                   restore_step=restore_step)
+                self.assignment = dict(plan.data_shard_of)
+                return plan
+            return None                       # only shard-less workers died
+        stragglers = self.monitor.stragglers()
+        # a stolen-from straggler that recovered (no longer flagged) is idle
+        # and healthy: return it to the spare pool so it can absorb the
+        # next steal instead of shrinking mitigation capacity forever
+        for w in sorted(self._mitigated):
+            if w not in stragglers:
+                self._mitigated.discard(w)
+                if w not in self.assignment and w not in self.spares:
+                    self.spares = sorted(self.spares + [w])
+        for w in stragglers:
+            if w in self._mitigated:
+                continue                      # already shard-less; tolerate
+            steal = plan_steal(self.assignment, w, self.spares)
+            if steal is None:
+                continue                      # no spare: wait for death
+            self.assignment = dict(steal.data_shard_of)
+            self.spares = [s for s in self.spares if s != steal.spare]
+            self._mitigated.add(w)
+            return steal
+        return None
 
 
 # ---------------------------------------------------------------- remesh

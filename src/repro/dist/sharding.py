@@ -54,6 +54,21 @@ def serve_rules(mesh: Any) -> Dict:
     return {ax: model for ax in _TP_AXES}
 
 
+def residual_spec(mesh: Any) -> P:
+    """PartitionSpec for the error-feedback residual buffers of the
+    compressed pod reduction.
+
+    The residual is *per-participant* state: each pod accumulates the
+    quantization error of its own gradient stream, so the buffers must be
+    sharded over "pod" (one row per pod, concatenated on dim 0).  Using
+    ``P()`` as the shard_map out_spec instead — with check_vma off — would
+    silently keep one pod's copy and replicate it, collapsing the
+    accumulators and voiding the codec's telescoping guarantee on pod>1
+    meshes (the PR-1 residual bug).
+    """
+    return P("pod") if "pod" in mesh.shape else P()
+
+
 def batch_axes(mesh: Any) -> Tuple[str, ...]:
     """All batch-capable mesh axes, outermost first."""
     return tuple(a for a in _BATCH_AXIS_ORDER if a in mesh.shape)

@@ -102,14 +102,9 @@ def build_lowered(cfg, shape, mesh, *, serve_impl: str = "gspmd",
                                         compress_pod_grads=use_compress)
         state = abstract_state(api)
         if use_compress:
-            import numpy as _np
+            from ..train.step import pod_err_struct
 
-            import jax.numpy as jnp
-            n = sum(int(_np.prod(p.shape))
-                    for p in jax.tree.leaves(state["params"]))
-            span = mesh.shape["data"] * mesh.shape["model"]
-            state["err"] = jax.ShapeDtypeStruct((-(-n // span) * span,),
-                                                jnp.float32)
+            state["err"] = pod_err_struct(api, mesh)
         batch = train_batch_specs(cfg, shape)
         return step.lower(state, batch)
     if shape.kind == "prefill":

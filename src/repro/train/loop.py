@@ -4,6 +4,13 @@ Single-host runnable (smoke configs on CPU), but structured exactly as the
 multi-host deployment: the loop consumes heartbeats, saves through the
 SplitFS checkpoint manager, and on (injected or real) failure executes a
 RemeshPlan — restore + pipeline reshard + continue.
+
+With a ``FaultPolicy`` attached the loop also runs the cheap half of the
+escalation ladder in-band: each step it polls the policy; a ``StealPlan``
+is executed inline (if *this* worker is the absorbing spare it reshards
+its pipeline onto the stolen shard — no restore, no recompile), while a
+``RemeshPlan`` terminates the loop so the caller can run the full
+restore+reshard path exactly as tests/test_elastic.py does.
 """
 
 from __future__ import annotations
@@ -17,7 +24,7 @@ import numpy as np
 
 from ..checkpoint.manager import CheckpointManager
 from ..data.pipeline import TokenPipeline
-from ..dist.fault import HeartbeatMonitor
+from ..dist.fault import FaultPolicy, HeartbeatMonitor, RemeshPlan, StealPlan
 from ..models.registry import ModelAPI
 from ..models.spec import init_params
 from .optimizer import AdamWConfig
@@ -31,6 +38,8 @@ class LoopConfig:
     log_every: int = 10
     microbatches: int = 1
     seed: int = 0
+    codec: str = "int8"              # pod-reduction codec (int8 | topk)
+    bucket_elems: Optional[int] = None   # None = compression default
 
 
 @dataclass
@@ -38,6 +47,8 @@ class LoopResult:
     losses: List[float] = field(default_factory=list)
     restored_from: Optional[int] = None
     steps_run: int = 0
+    mitigations: List[Any] = field(default_factory=list)  # Steal/RemeshPlans
+    remesh_pending: Optional[RemeshPlan] = None
 
 
 def run_training(api: ModelAPI, mesh, pipeline: TokenPipeline,
@@ -45,12 +56,17 @@ def run_training(api: ModelAPI, mesh, pipeline: TokenPipeline,
                  ckpt: Optional[CheckpointManager] = None,
                  monitor: Optional[HeartbeatMonitor] = None,
                  worker: int = 0,
+                 policy: Optional[FaultPolicy] = None,
                  crash_at: Optional[int] = None) -> LoopResult:
     """Run (or resume) training.  ``crash_at`` raises after that step's
     checkpointable state exists — tests use it to exercise restart."""
+    step_kwargs = {}
+    if loop_cfg.bucket_elems is not None:
+        step_kwargs["bucket_elems"] = loop_cfg.bucket_elems
     train_step, param_sh, batch_sh, init_state = make_train_step(
         api, mesh, opt_cfg, microbatches=loop_cfg.microbatches,
-        compress_pod_grads="pod" in mesh.shape)
+        compress_pod_grads="pod" in mesh.shape, codec=loop_cfg.codec,
+        **step_kwargs)
 
     result = LoopResult()
     start = 0
@@ -75,6 +91,27 @@ def run_training(api: ModelAPI, mesh, pipeline: TokenPipeline,
             result.steps_run += 1
             if monitor is not None:
                 monitor.beat(worker, step, dt)
+            if policy is not None:
+                plan = policy.poll(
+                    restore_step=ckpt.latest_step() if ckpt else None)
+                if plan is not None:
+                    result.mitigations.append(plan)
+                if isinstance(plan, StealPlan):
+                    # steal executes in-band: the absorbing spare adopts
+                    # the shard, the straggler leaves the training set
+                    # (shard-less; it may rejoin as a spare once healthy),
+                    # everyone else keeps running untouched
+                    if plan.spare == worker:
+                        pipeline = pipeline.reshard(
+                            shard=plan.shard,
+                            num_shards=pipeline.num_shards)
+                    elif plan.straggler == worker:
+                        return result
+                elif isinstance(plan, RemeshPlan):
+                    # full fallback needs the out-of-band restore+reshard
+                    # path; stop cleanly and hand the plan to the caller
+                    result.remesh_pending = plan
+                    return result
             if not np.isfinite(loss):
                 raise FloatingPointError(f"loss diverged at step {step}: {loss}")
             if ckpt is not None and (step + 1) % loop_cfg.ckpt_every == 0:

@@ -1,5 +1,5 @@
 """train_step builder: GSPMD (FSDP + TP) + microbatch accumulation +
-optional int8-compressed inter-pod gradient reduction.
+optional compressed inter-pod gradient reduction (per-layer bucketed).
 
 Structure:
   * parameters sharded by dist.sharding.train_rules (FSDP over data/pod,
@@ -10,26 +10,33 @@ Structure:
   * with a "pod" mesh axis and ``compress_pod_grads=True`` the function is
     wrapped in shard_map(manual={'pod'}, auto={'data','model'}): each pod
     computes grads on its half of the batch via GSPMD, then the pod-axis
-    mean runs through dist.compression.compressed_psum (int8 + error
-    feedback on the slow links).
+    mean runs through dist.compression.bucketed_compressed_psum — the
+    gradient pytree is split into size-capped buckets (leaves in layer
+    order) and each bucket gets its own collective, so bucket b's psum
+    overlaps bucket b+1's quantize and the backward compute.  ``codec``
+    selects int8 (blockwise quantization) or topk (magnitude
+    sparsification) — both with per-bucket error feedback.
+  * the error-feedback residuals are PER-POD state: they enter and leave
+    the shard_map with spec P("pod") (dist.sharding.residual_spec), one
+    row per pod.  The earlier single-bucket path used out_spec P() with
+    check_vma off, which collapsed all pods' residuals to pod 0's copy on
+    pod>1 meshes and broke the telescoping guarantee (DESIGN.md §9).
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
-import jax.flatten_util
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..dist import compression
-from ..dist.sharding import batch_axes, train_rules
+from ..dist.sharding import batch_axes, residual_spec, train_rules
 from ..models.registry import ModelAPI
 from ..models.shardctx import activation_batch_axes, serving_model_axis
-from ..models.spec import partition_specs
+from ..models.spec import is_spec, partition_specs
 from ..scan_util import maybe_scan
 from .optimizer import AdamWConfig, adamw_init, adamw_update
 
@@ -67,9 +74,32 @@ def make_loss_and_grad(api: ModelAPI, microbatches: int) -> Callable:
     return accumulated
 
 
+def grad_bucket_plan(api: ModelAPI, *, bucket_elems: int =
+                     compression.DEFAULT_BUCKET_ELEMS
+                     ) -> compression.BucketPlan:
+    """The static bucket partition of this model's gradient pytree (leaf
+    order == param flatten order == layer-group order for scanned stacks)."""
+    sizes = [int(np.prod(s.shape))
+             for s in jax.tree.leaves(api.init_specs(), is_leaf=is_spec)]
+    return compression.plan_buckets(sizes, bucket_elems=bucket_elems)
+
+
+def pod_err_struct(api: ModelAPI, mesh: Mesh, *, bucket_elems: int =
+                   compression.DEFAULT_BUCKET_ELEMS):
+    """ShapeDtypeStructs for the per-pod bucketed error-feedback state —
+    what dryrun lowering feeds where init_state would allocate zeros."""
+    plan = grad_bucket_plan(api, bucket_elems=bucket_elems)
+    pod = mesh.shape.get("pod", 1)
+    return [jax.ShapeDtypeStruct((pod * n,), jnp.float32)
+            for n in plan.padded_sizes]
+
+
 def make_train_step(api: ModelAPI, mesh: Mesh, opt_cfg: AdamWConfig,
                     *, microbatches: int = 1,
                     compress_pod_grads: bool = False,
+                    codec: str = "int8",
+                    bucket_elems: int = compression.DEFAULT_BUCKET_ELEMS,
+                    topk_frac: float = 0.01,
                     donate: bool = True):
     """Returns (train_step, param_shardings, state_shardings, batch_sharding).
 
@@ -81,8 +111,8 @@ def make_train_step(api: ModelAPI, mesh: Mesh, opt_cfg: AdamWConfig,
     # GSPMD with an uncompressed pod reduction.
     if api.cfg.family == "encdec":
         compress_pod_grads = False
-    use_pod_early = compress_pod_grads and "pod" in mesh.shape
-    rules = train_rules(mesh, include_pod_in_fsdp=not use_pod_early)
+    use_pod = compress_pod_grads and "pod" in mesh.shape
+    rules = train_rules(mesh, include_pod_in_fsdp=not use_pod)
     specs = api.init_specs()
     pspecs = partition_specs(specs, rules, mesh)
     param_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
@@ -90,7 +120,8 @@ def make_train_step(api: ModelAPI, mesh: Mesh, opt_cfg: AdamWConfig,
     ba = batch_axes(mesh)
     batch_sharding = NamedSharding(mesh, P(ba))
     loss_and_grad = make_loss_and_grad(api, microbatches)
-    use_pod = compress_pod_grads and "pod" in mesh.shape
+    plan = grad_bucket_plan(api, bucket_elems=bucket_elems) if use_pod \
+        else None
 
     def apply_update(params, grads, opt_state):
         new_params, new_opt, metrics = adamw_update(opt_cfg, params, grads,
@@ -107,40 +138,54 @@ def make_train_step(api: ModelAPI, mesh: Mesh, opt_cfg: AdamWConfig,
             metrics["loss"] = loss
             return {"params": new_params, "opt": new_opt}, metrics
     else:
-        # hierarchical reduction: manual over "pod", GSPMD inside
+        # hierarchical reduction: manual over "pod", GSPMD inside.  On jax
+        # 0.4.x the SPMD partitioner CHECK-fails (hlo_sharding.cc:1024)
+        # lowering the model inside a *partially* manual region on real
+        # pod>1 meshes; when the in-pod axes are trivial (data*model == 1,
+        # every multi-pod host mesh) the region runs FULLY manual instead —
+        # semantically identical, since FSDP/TP over size-1 axes are no-ops.
+        err_spec = residual_spec(mesh)
+        aux_span = 1
+        for a, s in mesh.shape.items():
+            if a != "pod":
+                aux_span *= int(s)
+        manual_axes = {"pod"} if aux_span > 1 else set(mesh.shape)
+        inner_ba = ("data",) if aux_span > 1 else ()
+        inner_md = md if aux_span > 1 else None
+
         def local_grads(params, batch):
             loss, grads = loss_and_grad(params, batch)
             return loss, grads
 
         def train_step(state, batch):
-            def podwise(params, opt, batch, err):
-                with activation_batch_axes(("data",)), \
-                        serving_model_axis(md):  # pod axis is manual
+            def podwise(params, opt, batch, errs):
+                with activation_batch_axes(inner_ba), \
+                        serving_model_axis(inner_md):  # pod axis is manual
                     loss, grads = local_grads(params, batch)
-                # single-bucket compressed reduction across the slow axis
-                # (per-leaf collectives would emit ~600 subgraphs; flat
-                # bucketing is also what production reducers do)
-                flat, unravel = jax.flatten_util.ravel_pytree(grads)
-                pad = err.shape[0] - flat.shape[0]
-                flat = jnp.pad(flat, (0, pad))
-                reduced, new_err = compression.compressed_psum(flat, err,
-                                                               "pod")
-                grads = unravel(reduced[: reduced.shape[0] - pad])
+                # per-layer bucketed compressed reduction across the slow
+                # axis: one collective per size-capped bucket pipelines
+                # reduction against quantize/backward (per-leaf collectives
+                # would emit ~600 subgraphs; whole-model flatten serializes)
+                grads, new_errs = compression.bucketed_compressed_psum(
+                    grads, errs, "pod", plan=plan, codec=codec,
+                    topk_frac=topk_frac)
                 loss = jax.lax.pmean(loss, "pod")
                 new_params, new_opt, metrics = apply_update(params, grads, opt)
                 metrics["loss"] = loss
-                return new_params, new_opt, metrics, new_err
+                return new_params, new_opt, metrics, new_errs
 
             # params replicated over pod (manual axis sees full arrays via
-            # P() in-specs because FSDP shards only over "data" here)
+            # P() in-specs because FSDP shards only over "data" here); the
+            # residuals are per-pod state and MUST travel P("pod") — P()
+            # out_specs with check_vma off would keep only pod 0's copy
             fn = jax.shard_map(
                 podwise, mesh=mesh,
-                in_specs=(P(), P(), P("pod"), P()),
-                out_specs=(P(), P(), P(), P()),
-                axis_names={"pod"}, check_vma=False)
-            new_params, new_opt, metrics, err = fn(
+                in_specs=(P(), P(), P("pod"), err_spec),
+                out_specs=(P(), P(), P(), err_spec),
+                axis_names=manual_axes, check_vma=False)
+            new_params, new_opt, metrics, errs = fn(
                 state["params"], state["opt"], batch, state["err"])
-            return {"params": new_params, "opt": new_opt, "err": err}, metrics
+            return {"params": new_params, "opt": new_opt, "err": errs}, metrics
 
     # state shardings: optimizer moments inherit the parameter sharding
     state_shardings: Dict[str, Any] = {
@@ -149,8 +194,9 @@ def make_train_step(api: ModelAPI, mesh: Mesh, opt_cfg: AdamWConfig,
                 "step": NamedSharding(mesh, P())},
     }
     if use_pod:
-        # flat error-feedback buffer, sharded across the in-pod axes
-        state_shardings["err"] = NamedSharding(mesh, P(("data", "model")))
+        # per-bucket error-feedback buffers, one residual row per pod
+        state_shardings["err"] = [NamedSharding(mesh, residual_spec(mesh))
+                                  for _ in range(plan.num_buckets)]
     metrics_shardings = {"loss": NamedSharding(mesh, P()),
                          "grad_norm": NamedSharding(mesh, P()),
                          "lr": NamedSharding(mesh, P())}
@@ -163,10 +209,8 @@ def make_train_step(api: ModelAPI, mesh: Mesh, opt_cfg: AdamWConfig,
     def init_state(params):
         state = {"params": params, "opt": adamw_init(params)}
         if use_pod:
-            n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
-            span = mesh.shape["data"] * mesh.shape["model"]
-            n_padded = -(-n // span) * span
-            state["err"] = jnp.zeros((n_padded,), jnp.float32)
+            state["err"] = compression.init_residuals(
+                plan, pod_size=mesh.shape["pod"])
         # place every leaf on its train sharding (donation requires inputs
         # to arrive pre-sharded)
         return jax.device_put(state, state_shardings)

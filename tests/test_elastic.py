@@ -5,6 +5,8 @@ This exercises the SAME code path a 1000-node deployment runs; the meshes
 here are 1-device but the plan/reshard/restore logic is size-independent.
 """
 
+import time
+
 import jax
 import numpy as np
 import pytest
@@ -13,7 +15,8 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.core import Mode, PMDevice, USplit, Volume, VolumeGeometry
 from repro.data import TokenPipeline
-from repro.dist.fault import HeartbeatMonitor, plan_remesh
+from repro.dist.fault import (FaultPolicy, HeartbeatMonitor, RemeshPlan,
+                              StealPlan, plan_remesh, plan_steal)
 from repro.models import build_model
 from repro.train import AdamWConfig, LoopConfig, run_training
 
@@ -73,16 +76,134 @@ def test_elastic_rescale_resumes_training():
     assert np.mean(r2.losses[-3:]) < np.mean(r1.losses[:3])
 
 
-def test_work_stealing_reassigns_straggler_shard():
-    """Straggler mitigation step 1: its data shard moves to a spare."""
-    monitor = HeartbeatMonitor(list(range(4)), patience=1)
-    for t in range(4):
-        for w in range(4):
-            monitor.beat(w, t, 8.0 if w == 2 else 1.0, now=float(t))
-        stragglers = monitor.stragglers()
-    assert stragglers == [2]
-    monitor.mark_dead(2)                        # evict after mitigation fails
-    plan = plan_remesh(monitor.alive_workers(), chips_per_worker=16,
-                       model_axis=16)
+def test_work_stealing_absorbs_straggler_without_remesh():
+    """Straggler mitigation: its data shard moves to an idle spare with NO
+    remesh plan — mesh geometry and every other worker's shard survive."""
+    monitor = HeartbeatMonitor([0, 1, 2, 3, 9], patience=1)
+    policy = FaultPolicy(monitor, assignment={0: 0, 1: 1, 2: 2, 3: 3},
+                         spares=[9], chips_per_worker=16, model_axis=16)
+    plans = []
+    for t in range(3):
+        for w in (0, 1, 3, 9):
+            monitor.beat(w, t, 1.0, now=float(t))
+        monitor.beat(2, t, 8.0, now=float(t))
+        plan = policy.poll(now=float(t))
+        if plan is not None:
+            plans.append(plan)
+    assert len(plans) == 1, "one steal, then the straggler is tolerated"
+    steal = plans[0]
+    assert isinstance(steal, StealPlan)
+    assert not isinstance(steal, RemeshPlan)
+    assert (steal.straggler, steal.spare, steal.shard) == (2, 9, 2)
+    # the spare stepped into the straggler's shard index; nobody else moved
+    assert policy.assignment == {0: 0, 1: 1, 3: 3, 9: 2}
+    assert policy.spares == []
+    assert monitor.alive_workers() == [0, 1, 2, 3, 9]   # nobody evicted
+    # the straggler recovers (fast beats again): it rejoins the spare pool
+    for t in (3, 4):
+        for w in (0, 1, 2, 3, 9):
+            monitor.beat(w, t, 1.0, now=float(t))
+        assert policy.poll(now=float(t)) is None
+    assert policy.spares == [2], "a recovered straggler becomes a spare"
+
+
+def test_plan_steal_requires_a_free_spare():
+    assignment = {0: 0, 1: 1}
+    assert plan_steal(assignment, 1, []) is None          # no spare
+    assert plan_steal(assignment, 1, [0]) is None         # spare owns a shard
+    assert plan_steal(assignment, 7, [5]) is None         # straggler shard-less
+    plan = plan_steal(assignment, 1, [5, 6])
+    assert plan.spare == 5 and plan.data_shard_of == {0: 0, 5: 1}
+    assert assignment == {0: 0, 1: 1}, "input assignment is not mutated"
+
+
+def test_steal_falls_back_to_remesh_on_confirmed_death():
+    """Escalation ladder: steal first; plan_remesh only once a shard-owning
+    worker is confirmed dead (heartbeat timeout)."""
+    monitor = HeartbeatMonitor([0, 1, 2, 3, 9], patience=1, timeout_s=5.0)
+    policy = FaultPolicy(monitor, assignment={0: 0, 1: 1, 2: 2, 3: 3},
+                         spares=[9], chips_per_worker=16, model_axis=16)
+    for w in (0, 1, 3, 9):
+        monitor.beat(w, 0, 1.0, now=0.0)
+    monitor.beat(2, 0, 8.0, now=0.0)
+    steal = policy.poll(now=0.0)
+    assert isinstance(steal, StealPlan)
+    # the straggler AND the absorbing spare go silent; others keep beating
+    for w in (0, 1, 3):
+        monitor.beat(w, 2, 1.0, now=2.0)
+    plan = policy.poll(now=6.0)
+    assert isinstance(plan, RemeshPlan)
     assert plan.mesh_shape == (3, 16)
     assert set(plan.data_shard_of) == {0, 1, 3}
+    assert 2 not in plan.survivors and 9 not in plan.survivors
+    assert policy.assignment == dict(plan.data_shard_of)
+
+
+def test_loop_executes_steal_inband():
+    """The training loop polls the policy each step; when this worker is the
+    absorbing spare it reshards its pipeline onto the stolen shard without
+    stopping (no restore, no remesh)."""
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    api = build_model(cfg)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=8)
+    monitor = HeartbeatMonitor([0, 1, 2, 3], patience=1)
+    policy = FaultPolicy(monitor, assignment={1: 0, 2: 1, 3: 2}, spares=[0],
+                         chips_per_worker=16, model_axis=16)
+    for w, rate in ((1, 1.0), (2, 8.0), (3, 1.0)):      # 2 is the straggler
+        monitor.beat(w, 0, rate)
+    pipe = TokenPipeline(cfg, global_batch=6, seq_len=32, seed=3,
+                         shard=0, num_shards=3)
+    r = run_training(api, host_mesh(), pipe, LoopConfig(steps=4), opt,
+                     monitor=monitor, worker=0, policy=policy)
+    assert r.steps_run == 4 and r.remesh_pending is None
+    steals = [p for p in r.mitigations if isinstance(p, StealPlan)]
+    assert len(steals) == 1
+    assert steals[0].spare == 0 and steals[0].shard == 1
+    assert policy.assignment[0] == 1
+    # the loop swapped to a resharded pipeline: the original object froze
+    # at the steal step while training kept advancing
+    assert pipe.snapshot() < 4
+
+
+def test_loop_straggler_exits_after_steal():
+    """When the loop's own worker is the flagged straggler, the steal moves
+    its shard to the spare and the loop leaves the training set (it must not
+    keep consuming the shard it no longer owns)."""
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    api = build_model(cfg)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=8)
+    monitor = HeartbeatMonitor([0, 1, 2, 9], patience=1)
+    policy = FaultPolicy(monitor, assignment={0: 0, 1: 1, 2: 2}, spares=[9],
+                         chips_per_worker=16, model_axis=16)
+    for w in (1, 2, 9):
+        monitor.beat(w, 0, 1e-4)     # everyone else reports far-faster steps
+    pipe = TokenPipeline(cfg, global_batch=6, seq_len=32, seed=3,
+                         shard=0, num_shards=3)
+    r = run_training(api, host_mesh(), pipe, LoopConfig(steps=6), opt,
+                     monitor=monitor, worker=0, policy=policy)
+    steals = [p for p in r.mitigations if isinstance(p, StealPlan)]
+    assert len(steals) == 1
+    assert steals[0].straggler == 0 and steals[0].spare == 9
+    assert r.steps_run < 6, "the shard-less straggler must leave the loop"
+    assert r.remesh_pending is None
+    assert policy.assignment == {1: 1, 2: 2, 9: 0}
+
+
+def test_loop_stops_cleanly_on_remesh_fallback():
+    """A confirmed death mid-run surfaces as remesh_pending so the caller
+    drives the full restore+reshard path (phases 2-3 above)."""
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    api = build_model(cfg)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=8)
+    monitor = HeartbeatMonitor([0, 1], timeout_s=0.5)
+    policy = FaultPolicy(monitor, assignment={0: 0, 1: 1},
+                         chips_per_worker=16, model_axis=16)
+    monitor.beat(1, 0, 1.0, now=time.monotonic() - 100.0)   # long dead
+    pipe = TokenPipeline(cfg, global_batch=4, seq_len=32, seed=5,
+                         shard=0, num_shards=1)
+    r = run_training(api, host_mesh(), pipe, LoopConfig(steps=6), opt,
+                     monitor=monitor, worker=0, policy=policy)
+    assert isinstance(r.remesh_pending, RemeshPlan)
+    assert r.steps_run < 6, "loop must stop for the out-of-band remesh"
+    assert r.remesh_pending.mesh_shape == (1, 16)
+    assert set(r.remesh_pending.data_shard_of) == {0}

@@ -11,13 +11,18 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
-echo "== dryrun smoke: train + decode cells on the host mesh =="
+echo "== dryrun smoke: train + prefill + decode cells on the host mesh =="
 python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k \
+    --smoke --out runs/ci-dryrun
+python -m repro.launch.dryrun --arch qwen2-1.5b --shape prefill_32k \
     --smoke --out runs/ci-dryrun
 python -m repro.launch.dryrun --arch qwen2-1.5b --shape decode_32k \
     --smoke --out runs/ci-dryrun
 python -m repro.launch.dryrun --arch mamba2-1.3b --shape decode_32k \
     --smoke --out runs/ci-dryrun
+
+echo "== dist microbench (fast): BENCH_dist.json trajectory =="
+python -m benchmarks.dist_micro --fast --out BENCH_dist.json
 
 if [[ "${1:-}" == "--bench" ]]; then
     echo "== benchmarks (fast) =="
