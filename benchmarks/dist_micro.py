@@ -28,8 +28,9 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.dist.compression import (bucketed_compressed_psum,
-                                    dequantize_int8, plan_buckets,
-                                    quantize_int8, quantize_with_feedback)
+                                    dequantize_int8, init_residuals,
+                                    plan_buckets, quantize_int8,
+                                    quantize_with_feedback)
 from repro.dist.fault import plan_remesh, plan_steal
 
 
@@ -78,7 +79,7 @@ def bench_bucketed(n_leaves: int, leaf_elems: int, bucket_elems: int, *,
     tree = [jnp.asarray(rng.standard_normal(leaf_elems), jnp.float32)
             for _ in range(n_leaves)]
     plan = plan_buckets([leaf_elems] * n_leaves, bucket_elems=bucket_elems)
-    errs = [jnp.zeros((n,), jnp.float32) for n in plan.padded_sizes]
+    errs = init_residuals(plan)
     mesh = jax.make_mesh((1,), ("pod",),
                          axis_types=(jax.sharding.AxisType.Auto,))
 
@@ -108,6 +109,83 @@ def bench_remesh(n_workers: int, *, iters: int) -> dict:
                     chips_per_worker=16, model_axis=16)
     dt = (time.perf_counter() - t0) / iters
     return {"n_workers": n_workers, "plan_s": dt, "plan_us": dt * 1e6}
+
+
+def bench_steal_absorb(*, fast: bool) -> dict:
+    """END-TO-END mitigation latency on a real (smoke-scale) training loop,
+    not just the planning decision: from the moment a straggler is flagged
+    (resp. confirmed dead) to the first completed post-mitigation step.
+
+      steal  = plan_steal + the absorbing spare's pipeline reshard + one
+               already-compiled train step (no restore, no recompile);
+      remesh = plan_remesh + SplitFS checkpoint restore (staging+relink
+               read path) + pipeline reshard + one train step.
+
+    Both run the SAME compiled step on the same mesh, so the difference is
+    exactly the work the steal rung of the escalation ladder skips
+    (DESIGN.md §9b): the checkpoint restore and the lockstep re-entry."""
+    import jax as _jax
+
+    from repro.checkpoint import CheckpointManager
+    from repro.configs import get_config
+    from repro.core import Mode, PMDevice, USplit, Volume, VolumeGeometry
+    from repro.data import TokenPipeline
+    from repro.models import build_model
+    from repro.models.spec import init_params
+    from repro.train import AdamWConfig
+    from repro.train.step import make_train_step
+
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    api = build_model(cfg)
+    mesh = _jax.make_mesh((1, 1), ("data", "model"),
+                          axis_types=(_jax.sharding.AxisType.Auto,) * 2)
+    pipe = TokenPipeline(cfg, global_batch=2 if fast else 8,
+                         seq_len=16 if fast else 64, seed=0)
+    step, _, bsh, init_state = make_train_step(
+        api, mesh, AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=8),
+        donate=False)
+
+    device = PMDevice(size=256 * 1024 * 1024)
+    vol = Volume.format(device, VolumeGeometry(
+        meta_blocks=256, journal_blocks=512, oplog_slots=1, oplog_blocks=64))
+    store = USplit(vol, mode=Mode.SYNC, staging_file_bytes=8 * 1024 * 1024,
+                   staging_prealloc=2, staging_background=False)
+    ckpt = CheckpointManager(store)
+
+    def one_step(state, pipeline):
+        batch = {k: _jax.device_put(v, bsh) for k, v in next(pipeline).items()}
+        state, m = step(state, batch)
+        _jax.block_until_ready(m["loss"])
+        return state
+
+    with _jax.set_mesh(mesh):
+        params = init_params(api.init_specs(), _jax.random.PRNGKey(0))
+        state = init_state(params)
+        state = one_step(state, pipe)            # warm the compiled step
+        ckpt.save(1, state)
+
+        # --- steal rung: metadata move + shard replay on the spare
+        t0 = time.perf_counter()
+        splan = plan_steal({0: 0, 1: 1}, 0, spares=[2])
+        spare_pipe = pipe.reshard(shard=splan.shard,
+                                  num_shards=pipe.num_shards)
+        one_step(state, spare_pipe)
+        t_steal = time.perf_counter() - t0
+
+        # --- remesh rung: restore + reshard + lockstep re-entry
+        t0 = time.perf_counter()
+        rplan = plan_remesh([1], chips_per_worker=1, model_axis=1)
+        _, rstate, _ = ckpt.restore(state)
+        survivor_pipe = pipe.reshard(
+            shard=rplan.data_shard_of[1],
+            num_shards=max(len(rplan.survivors), 1))
+        one_step(rstate, survivor_pipe)
+        t_remesh = time.perf_counter() - t0
+
+    return {"steal_absorb_s": t_steal, "remesh_absorb_s": t_remesh,
+            "remesh_over_steal": t_remesh / max(t_steal, 1e-12),
+            "stolen_shard": splan.shard,
+            "remesh_shape": list(rplan.mesh_shape)}
 
 
 def bench_steal(n_workers: int, *, iters: int) -> dict:
@@ -150,6 +228,7 @@ def run(fast: bool = False) -> dict:
                    for n in (16, 256, 4096)],
         "steal": [bench_steal(n, iters=max(iters * 10, 50))
                   for n in (16, 256, 4096)],
+        "absorb": bench_steal_absorb(fast=fast),
     }
 
 
@@ -177,6 +256,10 @@ def main() -> None:
               f"{row['steal_us']:.1f} us/steal vs "
               f"{row['remesh_us']:.1f} us/remesh "
               f"({row['remesh_over_steal']:.1f}x)")
+    ab = result["absorb"]
+    print(f"[dist_micro] absorb e2e: steal {ab['steal_absorb_s']:.3f}s vs "
+          f"remesh {ab['remesh_absorb_s']:.3f}s "
+          f"({ab['remesh_over_steal']:.1f}x)")
     print(f"[dist_micro] wrote {args.out}")
 
 

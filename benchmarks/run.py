@@ -90,6 +90,20 @@ def main() -> None:
     for row in dist["remesh"]:
         print(f"remesh,n_workers={row['n_workers']},"
               f"plan_us={row['plan_us']:.1f}")
+    ab = dist["absorb"]
+    print(f"absorb,steal_s={ab['steal_absorb_s']:.3f},"
+          f"remesh_s={ab['remesh_absorb_s']:.3f},"
+          f"ratio={ab['remesh_over_steal']:.1f}x")
+
+    print("\n== serving plane: chunked prefill vs token-at-a-time ==")
+    from . import serve_micro
+    serve = serve_micro.run(fast=args.fast)
+    Path("BENCH_serve.json").write_text(json.dumps(serve, indent=2))
+    sp = serve["prefill"]
+    print(f"prefill@{serve['prompt_len']},chunked={sp['chunked_tok_s']:.0f}tok/s,"
+          f"baseline={sp['token_at_a_time_tok_s']:.0f}tok/s,"
+          f"speedup={sp['speedup']:.1f}x,"
+          f"publishes={serve['publishes']['chunked']}")
 
     if Path("runs/dryrun").exists():
         print("\n== Roofline digest (single-pod dry-run artifacts) ==")

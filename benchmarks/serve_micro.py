@@ -1,0 +1,133 @@
+"""Serving-plane microbenchmark: chunked prefill vs token-at-a-time.
+
+Measures the tentpole claim of the chunked-prefill data plane (DESIGN.md
+§8): ingesting a long prompt through the ONE fixed-shape serve_step in
+C-token chunks (C == page_tokens, one page publish per chunk) against the
+token-at-a-time baseline (chunk_tokens=1 — the pre-refactor ingestion
+path), plus steady-state decode throughput and the metadata publish count.
+
+Artifact: ``BENCH_serve.json`` —
+  prefill.chunked_tok_s / prefill.token_at_a_time_tok_s / prefill.speedup
+  decode.tok_s, publishes.{chunked,token_at_a_time}, engine steps.
+
+  PYTHONPATH=src python -m benchmarks.serve_micro [--fast] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.spec import init_params
+from repro.serve import ServingEngine
+
+PROMPT_LEN = 512        # acceptance point: >= 5x at prompt length 512
+PAGE_TOKENS = 16
+
+
+def _mk_engine(api, params, chunk_tokens, *, max_seq):
+    return ServingEngine(api, params, max_batch=1, max_seq=max_seq,
+                         page_tokens=PAGE_TOKENS, chunk_tokens=chunk_tokens)
+
+
+def bench_prefill(api, params, chunk_tokens: int, *, prompt_len: int,
+                  decode_tokens: int) -> dict:
+    """Wall-time the prefill phase (submit -> prompt fully ingested), then
+    the decode tail, on a dedicated engine.  The compiled step is warmed by
+    a throwaway request first so jit time never pollutes the measurement."""
+    max_seq = prompt_len + decode_tokens + 2 * PAGE_TOKENS
+    eng = _mk_engine(api, params, chunk_tokens, max_seq=max_seq)
+    # warm BOTH compiled shapes: the C-wide prefill program and the
+    # width-1 decode slice (>= 2 new tokens forces a decode-only step)
+    warm = eng.submit([1, 2, 3], max_new_tokens=2)
+    eng.run_until_done()
+    assert warm.done
+
+    rng = np.random.default_rng(0)
+    prompt = list(rng.integers(1, api.cfg.vocab, prompt_len))
+    req = eng.submit(prompt, max_new_tokens=decode_tokens)
+    steps0 = eng.steps
+    t0 = time.perf_counter()
+    while req.in_prefill:
+        eng.step()
+    t_prefill = time.perf_counter() - t0
+    prefill_steps = eng.steps - steps0
+    t0 = time.perf_counter()
+    eng.run_until_done()
+    t_decode = time.perf_counter() - t0
+    assert req.done and len(req.output) == decode_tokens
+    return {
+        "chunk_tokens": chunk_tokens,
+        "prefill_s": t_prefill,
+        "prefill_tok_s": prompt_len / t_prefill,
+        "prefill_steps": prefill_steps,
+        "decode_s": t_decode,
+        "decode_tok_s": max(decode_tokens - 1, 1) / max(t_decode, 1e-9),
+        "publishes": eng.controller.pages_relinked,
+        "pool_pages": eng.controller.geom.num_pages,
+    }
+
+
+def run(fast: bool = False, arch: str = "qwen2-1.5b") -> dict:
+    cfg = get_config(arch, smoke=True)
+    api = build_model(cfg)
+    params = init_params(api.init_specs(), jax.random.PRNGKey(0))
+    decode_tokens = 8 if fast else 32
+    chunked = bench_prefill(api, params, PAGE_TOKENS,
+                            prompt_len=PROMPT_LEN, decode_tokens=decode_tokens)
+    baseline = bench_prefill(api, params, 1,
+                             prompt_len=PROMPT_LEN, decode_tokens=decode_tokens)
+    return {
+        "bench": "serve_micro",
+        "arch": arch,
+        "prompt_len": PROMPT_LEN,
+        "page_tokens": PAGE_TOKENS,
+        "prefill": {
+            "chunked_tok_s": chunked["prefill_tok_s"],
+            "token_at_a_time_tok_s": baseline["prefill_tok_s"],
+            "speedup": chunked["prefill_tok_s"] / baseline["prefill_tok_s"],
+            "chunked_steps": chunked["prefill_steps"],
+            "token_at_a_time_steps": baseline["prefill_steps"],
+        },
+        "decode": {
+            "chunked_engine_tok_s": chunked["decode_tok_s"],
+            "token_at_a_time_engine_tok_s": baseline["decode_tok_s"],
+        },
+        "publishes": {
+            "chunked": chunked["publishes"],
+            "token_at_a_time": baseline["publishes"],
+        },
+        "raw": {"chunked": chunked, "token_at_a_time": baseline},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    result = run(fast=args.fast, arch=args.arch)
+    Path(args.out).write_text(json.dumps(result, indent=2))
+    p = result["prefill"]
+    print(f"[serve_micro] prefill@{result['prompt_len']}: "
+          f"chunked {p['chunked_tok_s']:.0f} tok/s "
+          f"({p['chunked_steps']} steps) vs token-at-a-time "
+          f"{p['token_at_a_time_tok_s']:.0f} tok/s "
+          f"({p['token_at_a_time_steps']} steps) -> {p['speedup']:.1f}x")
+    print(f"[serve_micro] decode: "
+          f"{result['decode']['chunked_engine_tok_s']:.0f} tok/s; publishes "
+          f"chunked={result['publishes']['chunked']} "
+          f"baseline={result['publishes']['token_at_a_time']}")
+    print(f"[serve_micro] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -45,9 +45,10 @@ def main() -> None:
           f"CoW-copied={engine.controller.pages_copied}, "
           f"pool-util-peak~{engine.controller.utilization():.1%}")
 
-    # zero-copy beam fork demo
+    # zero-copy beam fork demo: one chunked-prefill step (16 tokens = one
+    # page = one publish) + a few decode steps, then fork mid-generation
     r = engine.submit(list(rng.integers(1, cfg.vocab, 16)), max_new_tokens=10)
-    for _ in range(18):
+    for _ in range(4):
         engine.step()
     child = engine.fork(r)
     engine.run_until_done()

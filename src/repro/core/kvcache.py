@@ -17,6 +17,17 @@ The host controller below owns metadata only (free lists, refcounts, extent
 maps); every data-path operation is a compiled JAX function over the pool
 arrays (kernels/kv_append, kernels/paged_attention).  The host never touches
 KV bytes — the same "data plane never traps" split as the file system.
+
+Chunked prefill (DESIGN.md §8) appends whole pages at a time through
+``append_tokens``; newly-FULL pages are *committed* (published) as they
+fill, and in STRICT mode every commit appends one 64 B ``OP_KV_COMMIT``
+operation-log entry (1 cacheline + 1 fence) so a crash mid-prefill recovers
+exactly the committed pages by idempotent replay (``replay_kv_commits``).
+
+Physical page 0 is RESERVED as the null page (never allocated): a zero
+page-table entry therefore always denotes "unallocated -> null", so the
+fixed-shape data plane may route pad-token writes through stale table rows
+without ever touching published data — the superblock-style reservation.
 """
 
 from __future__ import annotations
@@ -24,9 +35,12 @@ from __future__ import annotations
 import threading
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
+
+from .modes import Mode
+from .oplog import OP_KV_COMMIT, OP_TRUNCATE, OP_UNLINK, LogEntry, OpLog
 
 
 class KVPoolFullError(Exception):
@@ -64,9 +78,14 @@ class PagedKVCache:
     arrays to be shipped (or donated) to the compiled step function.
     """
 
-    def __init__(self, geom: KVGeometry) -> None:
+    def __init__(self, geom: KVGeometry, *, mode: Mode = Mode.POSIX,
+                 oplog: Optional[OpLog] = None) -> None:
         self.geom = geom
-        self._free: deque[int] = deque(range(geom.num_pages))
+        self.mode = mode
+        self.oplog = oplog
+        # page 0 is the reserved null page: zero table entries mean
+        # "unallocated", and pad-token writes routed there touch nothing live
+        self._free: deque[int] = deque(range(1, geom.num_pages))
         self._refcount = np.zeros(geom.num_pages, dtype=np.int32)
         self._seqs: Dict[int, _Seq] = {}
         self._free_sids: deque[int] = deque(range(geom.max_seqs))
@@ -114,6 +133,10 @@ class PagedKVCache:
     def free_seq(self, sid: int) -> None:
         with self._lock:
             seq = self._seqs.pop(sid)
+            # tombstone BEFORE releasing: sids and pages are both reused,
+            # so without it replay would resurrect this sequence's extents
+            # over pages since handed to live sequences
+            self._log_ctl(seq, OP_UNLINK, 0)
             for p in seq.pages:
                 self._release_page(p)
             self._page_table[sid, :] = 0
@@ -125,19 +148,58 @@ class PagedKVCache:
         tokens.  Returns newly-allocated page ids.  This is the metadata
         operation; it happens once per page_tokens tokens, not per token —
         the serving-plane version of 'metadata ops are rare'."""
+        with self._lock:
+            return self._reserve_locked(self._seqs[sid], new_len)
+
+    def _reserve_locked(self, seq: _Seq, new_len: int) -> List[int]:
         g = self.geom
         if new_len > g.max_tokens_per_seq:
             raise KVPoolFullError(f"sequence exceeds {g.max_tokens_per_seq} tokens")
+        need = -(-new_len // g.page_tokens)  # ceil
+        added: List[int] = []
+        while len(seq.pages) < need:
+            p = self._alloc_page()
+            self._page_table[seq.sid, len(seq.pages)] = p
+            seq.pages.append(p)
+            added.append(p)
+        return added
+
+    def pages_needed(self, sid: int, new_len: int) -> int:
+        """Staging pages a growth to ``new_len`` would have to allocate
+        (the engine's admission/backpressure check)."""
         with self._lock:
             seq = self._seqs[sid]
-            need = -(-new_len // g.page_tokens)  # ceil
-            added: List[int] = []
-            while len(seq.pages) < need:
+            return max(0, -(-new_len // self.geom.page_tokens) - len(seq.pages))
+
+    def append_tokens(self, sid: int, n_tokens: int,
+                      *, reserve: Optional[int] = None) -> Tuple[List[int], int]:
+        """Bulk chunk append: reserve staging pages for the ``n_tokens``
+        appended (hard — raises on exhaustion) and BEST-EFFORT up to
+        ``reserve`` tokens so a fixed-shape chunk's pad positions land in
+        allocated staging slots; when the pool can't spare the extra page,
+        pads simply route through zero table entries to the null page, so
+        the over-reserve is an optimization, never a safety requirement.
+        Advances the length by ``n_tokens`` and COMMITs every newly-full
+        page — one metadata publish (+ one 64 B oplog entry in STRICT mode)
+        per page.  With chunk == page_tokens a full prefill chunk is
+        exactly one publish (the chunk/page invariant, DESIGN.md §3.4).
+        Returns (newly-allocated page ids, pages published)."""
+        g = self.geom
+        with self._lock:
+            seq = self._seqs[sid]
+            new_len = seq.length + n_tokens
+            added = self._reserve_locked(seq, new_len)
+            cap = min(max(new_len, seq.length + (reserve or n_tokens)),
+                      g.max_tokens_per_seq)
+            desired = -(-cap // g.page_tokens)
+            while len(seq.pages) < desired and self._free:
                 p = self._alloc_page()
                 self._page_table[sid, len(seq.pages)] = p
                 seq.pages.append(p)
                 added.append(p)
-            return added
+            seq.length = new_len
+            self._seq_lens[sid] = new_len
+            return added, self._commit_locked(seq)
 
     def advance(self, sid: int, n_tokens: int = 1) -> None:
         """Record that n tokens were appended (the device scatter happened
@@ -146,11 +208,51 @@ class PagedKVCache:
             seq = self._seqs[sid]
             seq.length += n_tokens
             self._seq_lens[sid] = seq.length
-            full = seq.length // self.geom.page_tokens
-            if full > seq.committed_pages:
-                # metadata-only publish of the now-full pages
-                self.pages_relinked += full - seq.committed_pages
-                seq.committed_pages = full
+            self._commit_locked(seq)
+
+    def commit(self, sid: int) -> int:
+        """Publish every newly-full page of ``sid`` (relink: metadata-only;
+        no data moves).  Returns the number of pages published."""
+        with self._lock:
+            return self._commit_locked(self._seqs[sid])
+
+    def _commit_locked(self, seq: _Seq) -> int:
+        full = seq.length // self.geom.page_tokens
+        n = full - seq.committed_pages
+        if n <= 0:
+            return 0
+        for idx in range(seq.committed_pages, full):
+            self._log_commit(seq, idx)
+        self.pages_relinked += n
+        seq.committed_pages = full
+        return n
+
+    def _log_commit(self, seq: _Seq, page_idx: int) -> None:
+        """STRICT mode: one pre-allocated 64 B log entry per published page
+        (1 cacheline store + 1 fence) — crash recovery replays these to
+        reconstruct exactly the committed extent map."""
+        if self.oplog is None or not self.mode.logs_ops:
+            return
+        self.oplog.append(LogEntry(
+            op=OP_KV_COMMIT, mode=int(self.mode),
+            seqno=self.oplog.next_seqno(), inode=seq.sid, offset=page_idx,
+            length=self.geom.page_tokens, staging_addr=seq.pages[page_idx],
+            aux1=seq.length))
+
+    def _log_ctl(self, seq: _Seq, op: int, keep_pages: int) -> None:
+        """Unlink/truncate tombstones: replay must not resurrect extents of
+        freed (or rolled-back) sequences whose sid/pages were reused."""
+        if self.oplog is None or not self.mode.logs_ops:
+            return
+        self.oplog.append(LogEntry(
+            op=op, mode=int(self.mode), seqno=self.oplog.next_seqno(),
+            inode=seq.sid, offset=keep_pages, length=0, staging_addr=0))
+
+    def committed_extents(self, sid: int) -> Dict[int, int]:
+        """The published extent map: logical page index -> physical page."""
+        with self._lock:
+            seq = self._seqs[sid]
+            return {i: seq.pages[i] for i in range(seq.committed_pages)}
 
     def seq_length(self, sid: int) -> int:
         with self._lock:
@@ -159,17 +261,21 @@ class PagedKVCache:
     # ------------------------------------------------------------- zero-copy fork
 
     def fork(self, parent_sid: int) -> int:
-        """Beam/speculative fork: share all full pages by refcount (the
-        hard-link analogue).  The last, partially-filled page is copied on
-        the NEXT append by whichever branch appends first (CoW) — that copy
-        is the partial-block-copy analogue and the only data movement."""
+        """Beam/speculative fork: share the pages holding DATA by refcount
+        (the hard-link analogue).  The last, partially-filled page is
+        copied on the NEXT append by whichever branch appends first (CoW) —
+        that copy is the partial-block-copy analogue and the only data
+        movement.  Over-reserved staging pages BEYOND the tail hold no
+        data and stay parent-private: sharing them would let both branches
+        scatter into one physical page with no CoW ever privatizing it."""
         with self._lock:
             if not self._free_sids:
                 raise KVPoolFullError("no free sequence slots")
             parent = self._seqs[parent_sid]
             sid = self._free_sids.popleft()
+            n_live = -(-parent.length // self.geom.page_tokens)
             child = _Seq(sid, length=parent.length,
-                         pages=list(parent.pages),
+                         pages=list(parent.pages[:n_live]),
                          committed_pages=parent.committed_pages)
             for p in child.pages:
                 self._refcount[p] += 1
@@ -177,6 +283,10 @@ class PagedKVCache:
             self._page_table[sid, : len(child.pages)] = child.pages
             self._page_table[sid, len(child.pages):] = 0
             self._seq_lens[sid] = child.length
+            # the hard-link publish is itself logged: replay after a crash
+            # reconstructs the child's shared extents too
+            for idx in range(child.committed_pages):
+                self._log_commit(child, idx)
             return sid
 
     def prepare_append(self, sid: int, n_tokens: int = 1) -> Optional[tuple[int, int]]:
@@ -218,7 +328,12 @@ class PagedKVCache:
             self._page_table[sid, keep:] = 0
             seq.pages = seq.pages[:keep]
             seq.length = new_len
-            seq.committed_pages = min(seq.committed_pages, keep)
+            # committed == published FULL pages: a kept-but-now-partial tail
+            # page drops back to staging and is recommitted when it refills
+            full = new_len // g.page_tokens
+            if full < seq.committed_pages:
+                self._log_ctl(seq, OP_TRUNCATE, full)
+            seq.committed_pages = min(seq.committed_pages, full)
             self._seq_lens[sid] = new_len
 
     # ------------------------------------------------------------- device mirrors
@@ -238,3 +353,31 @@ class PagedKVCache:
         with self._lock:
             used = g.num_pages - len(self._free)
         return used / g.num_pages
+
+
+# ---------------------------------------------------------------- recovery
+
+
+def replay_kv_commits(entries: Iterable[LogEntry]) -> Dict[int, Dict[int, int]]:
+    """Idempotent recovery replay (paper §5.3 applied to the serving plane):
+    rebuild each LIVE sequence's COMMITTED extent map {logical page index ->
+    physical page} from the operation log.
+
+    ``OP_KV_COMMIT`` publishes an extent; ``OP_UNLINK`` tombstones a freed
+    sequence (its sid/pages may have been reused by later entries);
+    ``OP_TRUNCATE`` keeps only the first ``offset`` committed pages
+    (speculative-decode rollback).  Replay is idempotent by construction —
+    re-applying the full log (repeated crashes during recovery) converges
+    to the same map; within one pass a later entry for the same (sid, page
+    index) wins, which is exactly the CoW-recommit case after a fork's
+    partial-tail copy."""
+    out: Dict[int, Dict[int, int]] = {}
+    for e in entries:
+        if e.op == OP_KV_COMMIT:
+            out.setdefault(e.inode, {})[e.offset] = e.staging_addr
+        elif e.op == OP_UNLINK:
+            out.pop(e.inode, None)
+        elif e.op == OP_TRUNCATE and e.inode in out:
+            out[e.inode] = {i: p for i, p in out[e.inode].items()
+                            if i < e.offset}
+    return out

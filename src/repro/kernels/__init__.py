@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the perf-critical data-plane ops, each with a
 pure-jnp oracle (ref.py) and a dispatching wrapper (ops.py)."""
 from .flash_attention import attention, attention_ref, local_attention_ref
-from .kv_append import kv_append, kv_append_ref
-from .paged_attention import paged_attention, paged_attention_ref
+from .kv_append import (kv_append, kv_append_chunk, kv_append_chunk_ref,
+                        kv_append_ref)
+from .paged_attention import (paged_attention, paged_attention_chunk,
+                              paged_attention_chunk_ref, paged_attention_ref)
 from .ssd_chunk import ssd_chunk, ssd_chunk_ref

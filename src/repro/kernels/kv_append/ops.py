@@ -1,4 +1,10 @@
-"""Public KV-append op: ref / pallas / interpret dispatch."""
+"""Public KV-append ops: ref / pallas / interpret dispatch.
+
+``kv_append`` writes one token per sequence (the decode slice);
+``kv_append_chunk`` writes up to C tokens per sequence with per-token
+(page, slot) addressing (the chunked-prefill path).  Both share the same
+Pallas kernel — the single-token op is its C=1 slice.
+"""
 
 from __future__ import annotations
 
@@ -8,7 +14,8 @@ import jax.numpy as jnp
 
 from ..common import resolve_impl
 from .kernel import kv_append as _append_kernel
-from .ref import kv_append_ref
+from .kernel import kv_append_chunk as _chunk_kernel
+from .ref import kv_append_chunk_ref, kv_append_ref
 
 
 def kv_append(
@@ -24,3 +31,18 @@ def kv_append(
         return kv_append_ref(pool, new, page_ids, slot_ids)
     return _append_kernel(pool, new, page_ids, slot_ids,
                           interpret=impl == "interpret")
+
+
+def kv_append_chunk(
+    pool: jnp.ndarray,        # [P, T, KV, D]
+    new: jnp.ndarray,         # [B, C, KV, D]
+    page_ids: jnp.ndarray,    # [B, C] int32
+    slot_ids: jnp.ndarray,    # [B, C] int32
+    *,
+    impl: Optional[str] = None,
+) -> jnp.ndarray:
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return kv_append_chunk_ref(pool, new, page_ids, slot_ids)
+    return _chunk_kernel(pool, new, page_ids, slot_ids,
+                         interpret=impl == "interpret")

@@ -1,8 +1,21 @@
 """Pure-jnp oracle for the KV append scatter.
 
-The non-temporal-store analogue: one token's K/V lands in its sequence's
-current staging page at (page, slot) — computed by the host controller's
+The non-temporal-store analogue: tokens' K/V land in their sequence's
+current staging page(s) at (page, slot) — computed by the host controller's
 metadata, executed entirely in-graph (no host round trip).
+
+Two entry points share one contract:
+
+  * ``kv_append_ref``       one token per sequence   (the decode slice)
+  * ``kv_append_chunk_ref`` up to C tokens per sequence (chunked prefill);
+                            per-token (page, slot) addressing, so a chunk
+                            may straddle a page boundary — the partial-
+                            block-copy analogue of relink.
+
+Addressing safety is the CALLER's job (models/attention._paged_ids): pad
+tokens beyond a slot's valid count are routed into allocated-but-
+unpublished staging slots or the reserved null page 0, never into
+published data (DESIGN.md §3.4).
 """
 
 from __future__ import annotations
@@ -28,5 +41,22 @@ def kv_append_ref(
     from ...models.shardctx import constrain_dim_model
 
     new = constrain_dim_model(new.astype(pool.dtype), 2)
+    out = pool.at[page_ids, slot_ids].set(new)
+    return constrain_dim_model(out, 3)
+
+
+def kv_append_chunk_ref(
+    pool: jnp.ndarray,        # [P, T, KV, D]
+    new: jnp.ndarray,         # [B, C, KV, D]  chunk of tokens per sequence
+    page_ids: jnp.ndarray,    # [B, C] int32   physical page per token
+    slot_ids: jnp.ndarray,    # [B, C] int32   slot within that page
+) -> jnp.ndarray:
+    """Multi-token scatter: new[b, c] lands at pool[page_ids[b, c],
+    slot_ids[b, c]].  (page, slot) pairs of *valid* tokens are unique by
+    construction (per-sequence staging exclusivity); pad tokens may collide
+    on the null page, where any write order is acceptable."""
+    from ...models.shardctx import constrain_dim_model
+
+    new = constrain_dim_model(new.astype(pool.dtype), 3)
     out = pool.at[page_ids, slot_ids].set(new)
     return constrain_dim_model(out, 3)

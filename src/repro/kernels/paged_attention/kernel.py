@@ -1,19 +1,27 @@
-"""Pallas TPU paged decode attention.
+"""Pallas TPU paged attention: chunked queries over the page pool.
 
-One query token per sequence attends over KV pages addressed by a page
-table.  The page table and sequence lengths ride in as *scalar prefetch*
-operands, so each grid step's BlockSpec index map dereferences
-``page_table[b, n]`` — the pool page is DMA'd straight from HBM into VMEM
-with no gather materialization.  This is the device-side collection-of-
-mmaps: the kernel walks the extent map exactly like U-Split routes a read.
+A chunk of C query tokens per sequence (C=1 for decode) attends over KV
+pages addressed by a page table.  The page table and sequence lengths ride
+in as *scalar prefetch* operands, so each grid step's BlockSpec index map
+dereferences ``page_table[b, n]`` — the pool page is DMA'd straight from
+HBM into VMEM with no gather materialization.  This is the device-side
+collection-of-mmaps: the kernel walks the extent map exactly like U-Split
+routes a read.
+
+Queries arrive flattened to rows [C * group, D] per kv head; row r belongs
+to query token ``r // group`` at absolute position ``lengths[b] + r//group``
+and causality is enforced PER ROW inside the chunk — prefill's in-chunk
+triangle and decode's single row are the same mask expression.
 
 Grid ``(B, n_pages)`` with pages innermost (sequential); online-softmax
-state in VMEM scratch.  Pages past a sequence's length — and pages outside
-the sliding window for local-attention layers — are skipped via ``pl.when``
-(the staging-page analogue: allocated but unpublished pages cost nothing).
+state in VMEM scratch.  Pages past the chunk's last query position — and
+pages wholly outside the sliding window for local-attention layers — are
+skipped via ``pl.when`` (the staging-page analogue: allocated but
+unpublished pages cost nothing).
 
-VMEM per step: one KV page (T*KV*D*2) + q (H*D) + state (~H*(D+2)) floats;
-for T=128, KV=8, D=128, H=64 that is ~1.3 MB.
+VMEM per step: one KV page (T*KV*D*2) + q (C*group*D) + state
+(~C*group*(D+2)) floats; for T=128, KV=8, D=128, C=128, group=8 that is
+~1.8 MB.
 """
 
 from __future__ import annotations
@@ -31,8 +39,8 @@ NEG_INF = -1e30
 
 def _paged_kernel(pt_ref, len_ref, q_ref, kpool_ref, vpool_ref, o_ref,
                   m_ref, l_ref, acc_ref, *, page_tokens: int, group: int,
-                  window: Optional[int], softcap: Optional[float],
-                  num_page_steps: int):
+                  q_tokens: int, window: Optional[int],
+                  softcap: Optional[float], num_page_steps: int):
     b = pl.program_id(0)
     n = pl.program_id(1)
 
@@ -42,26 +50,28 @@ def _paged_kernel(pt_ref, len_ref, q_ref, kpool_ref, vpool_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    length = len_ref[b]
+    start = len_ref[b]                     # pre-chunk length = first q position
     page_lo = n * page_tokens
-    run = page_lo < length
+    run = page_lo < start + q_tokens       # last query sits at start+q_tokens-1
     if window is not None:
-        run = jnp.logical_and(run, page_lo + page_tokens > length - 1 - window)
+        # first query's window floor is start - window; skip pages wholly below
+        run = jnp.logical_and(run, page_lo + page_tokens > start - window)
 
     @pl.when(run)
     def _compute():
-        q = q_ref[0].astype(jnp.float32)                     # [H, D]
+        q = q_ref[0].astype(jnp.float32)                     # [CG, D]
         k = kpool_ref[0, :, 0, :].astype(jnp.float32)        # [T, D] (one kv head)
         v = vpool_ref[0, :, 0, :].astype(jnp.float32)        # [T, D]
         scale = q.shape[-1] ** -0.5
         s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32)  # [H, T]
+                                preferred_element_type=jnp.float32)  # [CG, T]
         if softcap is not None:
             s = softcap * jnp.tanh(s / softcap)
         kpos = page_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        mask = kpos < length
+        qpos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        mask = kpos <= qpos                                  # chunk-causal
         if window is not None:
-            mask &= kpos > length - 1 - window
+            mask &= kpos > qpos - window
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_ref[:, 0]
@@ -83,56 +93,78 @@ def _paged_kernel(pt_ref, len_ref, q_ref, kpool_ref, vpool_ref, o_ref,
     jax.jit,
     static_argnames=("window", "softcap", "interpret"),
 )
-def paged_attention(
-    q: jnp.ndarray,            # [B, H, D]
+def paged_attention_chunk(
+    q: jnp.ndarray,            # [B, C, H, D]
     pool_k: jnp.ndarray,       # [P, T, KV, D]
     pool_v: jnp.ndarray,       # [P, T, KV, D]
     page_table: jnp.ndarray,   # [B, N] int32
-    lengths: jnp.ndarray,      # [B] int32
+    lengths: jnp.ndarray,      # [B] int32      (PRE-chunk length)
     *,
     window: Optional[int] = None,
     softcap: Optional[float] = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    B, H, D = q.shape
+    B, C, H, D = q.shape
     P, T, KV, _ = pool_k.shape
     N = page_table.shape[1]
     group = H // KV
     assert H % KV == 0
+    CG = C * group
 
     # One grid pass per kv head keeps the VMEM page slice 2-D; for GQA we
     # fold the kv-head choice into the grid's head axis when KV > 1.
     def run_for_kv(kv_idx: int, q_h: jnp.ndarray) -> jnp.ndarray:
         kernel = functools.partial(
-            _paged_kernel, page_tokens=T, group=group, window=window,
-            softcap=softcap, num_page_steps=N)
+            _paged_kernel, page_tokens=T, group=group, q_tokens=C,
+            window=window, softcap=softcap, num_page_steps=N)
         grid_spec = pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=(B, N),
             in_specs=[
-                pl.BlockSpec((1, group, D), lambda b, n, pt, ln: (b, 0, 0)),
+                pl.BlockSpec((1, CG, D), lambda b, n, pt, ln: (b, 0, 0)),
                 pl.BlockSpec((1, T, 1, D),
                              lambda b, n, pt, ln: (pt[b, n], 0, kv_idx, 0)),
                 pl.BlockSpec((1, T, 1, D),
                              lambda b, n, pt, ln: (pt[b, n], 0, kv_idx, 0)),
             ],
-            out_specs=pl.BlockSpec((1, group, D), lambda b, n, pt, ln: (b, 0, 0)),
+            out_specs=pl.BlockSpec((1, CG, D), lambda b, n, pt, ln: (b, 0, 0)),
             scratch_shapes=[
-                pltpu.VMEM((group, 1), jnp.float32),
-                pltpu.VMEM((group, 1), jnp.float32),
-                pltpu.VMEM((group, D), jnp.float32),
+                pltpu.VMEM((CG, 1), jnp.float32),
+                pltpu.VMEM((CG, 1), jnp.float32),
+                pltpu.VMEM((CG, D), jnp.float32),
             ],
         )
         return pl.pallas_call(
             kernel,
             grid_spec=grid_spec,
-            out_shape=jax.ShapeDtypeStruct((B, group, D), q.dtype),
+            out_shape=jax.ShapeDtypeStruct((B, CG, D), q.dtype),
             compiler_params=pltpu.CompilerParams(
                 dimension_semantics=("parallel", "arbitrary"),
             ),
             interpret=interpret,
         )(page_table, lengths, q_h, pool_k, pool_v)
 
-    qh = q.reshape(B, KV, group, D)
-    outs = [run_for_kv(i, qh[:, i]) for i in range(KV)]
-    return jnp.stack(outs, axis=1).reshape(B, H, D)
+    # rows flatten (token, head-in-group): row r -> token r // group
+    qh = q.reshape(B, C, KV, group, D).transpose(0, 2, 1, 3, 4)  # [B,KV,C,G,D]
+    outs = [run_for_kv(i, qh[:, i].reshape(B, CG, D)) for i in range(KV)]
+    out = jnp.stack(outs, axis=1).reshape(B, KV, C, group, D)
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, C, H, D)
+
+
+def paged_attention(
+    q: jnp.ndarray,            # [B, H, D]
+    pool_k: jnp.ndarray,       # [P, T, KV, D]
+    pool_v: jnp.ndarray,       # [P, T, KV, D]
+    page_table: jnp.ndarray,   # [B, N] int32
+    lengths: jnp.ndarray,      # [B] int32      (TOTAL valid keys)
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Single-query decode: the C=1 slice of the chunk kernel (the last
+    valid key IS the query position, so pre-length = lengths - 1)."""
+    out = paged_attention_chunk(q[:, None], pool_k, pool_v, page_table,
+                                lengths - 1, window=window, softcap=softcap,
+                                interpret=interpret)
+    return out[:, 0]

@@ -1,4 +1,10 @@
-"""Public paged decode-attention op: ref / pallas / interpret dispatch."""
+"""Public paged-attention ops: ref / pallas / interpret dispatch.
+
+``paged_attention`` serves one query per sequence (``lengths`` = total
+valid keys); ``paged_attention_chunk`` serves a chunk of C queries at
+positions ``lengths[b] .. lengths[b]+C-1`` with causality enforced inside
+the chunk (``lengths`` = PRE-chunk length).  Both share one Pallas kernel.
+"""
 
 from __future__ import annotations
 
@@ -8,7 +14,8 @@ import jax.numpy as jnp
 
 from ..common import resolve_impl
 from .kernel import paged_attention as _paged_kernel
-from .ref import paged_attention_ref
+from .kernel import paged_attention_chunk as _chunk_kernel
+from .ref import paged_attention_chunk_ref, paged_attention_ref
 
 
 def paged_attention(
@@ -27,5 +34,26 @@ def paged_attention(
         return paged_attention_ref(q, pool_k, pool_v, page_table, lengths,
                                    window=window, softcap=softcap)
     return _paged_kernel(q, pool_k, pool_v, page_table, lengths,
+                         window=window, softcap=softcap,
+                         interpret=impl == "interpret")
+
+
+def paged_attention_chunk(
+    q: jnp.ndarray,            # [B, C, H, D]
+    pool_k: jnp.ndarray,       # [P, T, KV, D]
+    pool_v: jnp.ndarray,       # [P, T, KV, D]
+    page_table: jnp.ndarray,   # [B, N] int32
+    lengths: jnp.ndarray,      # [B] int32      (PRE-chunk length)
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    impl: Optional[str] = None,
+) -> jnp.ndarray:
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return paged_attention_chunk_ref(q, pool_k, pool_v, page_table,
+                                         lengths, window=window,
+                                         softcap=softcap)
+    return _chunk_kernel(q, pool_k, pool_v, page_table, lengths,
                          window=window, softcap=softcap,
                          interpret=impl == "interpret")

@@ -1,8 +1,17 @@
-"""Pure-jnp oracle for paged decode attention.
+"""Pure-jnp oracles for paged attention over the KV page pool.
 
-One new query token per sequence attends over a KV cache scattered across
-pool pages addressed by a page table — the device half of the paper's
-collection-of-mmaps (DESIGN.md §3.4).
+Two entry points, one extent-walk semantics (DESIGN.md §3.4):
+
+  * ``paged_attention_ref``        one query token per sequence; ``lengths``
+                                   counts the TOTAL valid keys (decode calls
+                                   pass pre-length + 1).
+  * ``paged_attention_chunk_ref``  a chunk of C query tokens per sequence at
+                                   positions lengths[b] .. lengths[b]+C-1;
+                                   ``lengths`` is the PRE-chunk sequence
+                                   length and causality is enforced *inside*
+                                   the chunk: query c sees keys at positions
+                                   <= lengths[b] + c.  Decode is the C=1
+                                   degenerate slice.
 
 GQA is evaluated with grouped einsums (q reshaped to [B, KV, G, D]) so the
 gathered K/V are never head-replicated — keeps the lowered memory honest.
@@ -55,3 +64,44 @@ def paged_attention_ref(
     denom = jnp.maximum(probs.sum(axis=-1, keepdims=True), 1e-20)
     out = jnp.einsum("bkgs,bskd->bkgd", probs / denom, v)
     return out.reshape(B, H, D).astype(q.dtype)
+
+
+def paged_attention_chunk_ref(
+    q: jnp.ndarray,            # [B, C, H, D]       (chunk of query tokens)
+    pool_k: jnp.ndarray,       # [P, T, KV, D]
+    pool_v: jnp.ndarray,       # [P, T, KV, D]
+    page_table: jnp.ndarray,   # [B, N] int32
+    lengths: jnp.ndarray,      # [B] int32          (PRE-chunk length)
+    *,
+    softcap: Optional[float] = None,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    B, C, H, D = q.shape
+    P, T, KV, _ = pool_k.shape
+    N = page_table.shape[1]
+    G = H // KV
+
+    from ...models.shardctx import constrain_dim_model
+
+    k = constrain_dim_model(
+        pool_k[page_table].reshape(B, N * T, KV, D), 3).astype(jnp.float32)
+    v = constrain_dim_model(
+        pool_v[page_table].reshape(B, N * T, KV, D), 3).astype(jnp.float32)
+
+    qg = (q.astype(jnp.float32) * (D ** -0.5)).reshape(B, C, KV, G, D)
+    qg = constrain_dim_model(qg, 4)
+    logits = jnp.einsum("bckgd,bskd->bkgcs", qg, k)    # [B, KV, G, C, S]
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    kpos = jnp.arange(N * T)[None, None, :]            # [1, 1, S]
+    qpos = lengths[:, None, None] + jnp.arange(C)[None, :, None]  # [B, C, 1]
+    mask = kpos <= qpos                                # chunk-causal
+    if window is not None:
+        mask &= kpos > qpos - window
+    mask = mask[:, None, None, :, :]                   # [B, 1, 1, C, S]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True)) * mask
+    denom = jnp.maximum(probs.sum(axis=-1, keepdims=True), 1e-20)
+    out = jnp.einsum("bkgcs,bskd->bkgcd", probs / denom, v)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, C, H, D).astype(q.dtype)

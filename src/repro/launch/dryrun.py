@@ -85,7 +85,7 @@ def _n_groups(cfg) -> float:
 def build_lowered(cfg, shape, mesh, *, serve_impl: str = "gspmd",
                   microbatches: int = 1, page_tokens: int = 128,
                   multi_pod: bool = False, serve_dtype: str = "f32",
-                  compress: bool = False):
+                  compress: bool = False, serve_chunk: int = 1):
     if shape.kind in ("prefill", "decode") and serve_dtype == "bf16":
         import jax.numpy as jnp
 
@@ -130,17 +130,19 @@ def build_lowered(cfg, shape, mesh, *, serve_impl: str = "gspmd",
                        out_shardings=NamedSharding(mesh, P(ba)))
         return step.lower(abstract_params(api.init_specs()),
                           train_batch_specs(cfg, shape))
-    # decode
+    # decode / chunked serve: the unified fixed-shape serve_step
     from ..models.spec import abstract_params
     from ..serve.step import make_serve_step
 
-    tokens, caches = decode_specs(api, shape, page_tokens)
+    tokens, n_new, caches = decode_specs(api, shape, page_tokens,
+                                         chunk=serve_chunk)
     step, _, _ = make_serve_step(api, mesh, caches, variant=serve_impl)
-    return step.lower(abstract_params(api.init_specs()), tokens, caches)
+    return step.lower(abstract_params(api.init_specs()), tokens, caches, n_new)
 
 
 def measure_cell(cfg, shape, mesh, *, serve_impl: str, page_tokens: int,
-                 microbatches: int = 1, serve_dtype: str = "f32"):
+                 microbatches: int = 1, serve_dtype: str = "f32",
+                 serve_chunk: int = 1):
     """Two-point unrolled lowering -> extrapolated per-chip roofline terms."""
     points = {}
     for mult in (1, 2):
@@ -149,7 +151,8 @@ def measure_cell(cfg, shape, mesh, *, serve_impl: str, page_tokens: int,
             lowered = build_lowered(small, shape, mesh, serve_impl=serve_impl,
                                     page_tokens=page_tokens,
                                     microbatches=microbatches,
-                                    serve_dtype=serve_dtype)
+                                    serve_dtype=serve_dtype,
+                                    serve_chunk=serve_chunk)
             compiled = lowered.compile()
         ca = _cost_analysis(compiled)
         coll = analyze_collectives(compiled.as_text())
@@ -186,7 +189,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                serve_impl: str = "gspmd", page_tokens: int = 128,
                microbatches: int = 1, remat=None, measure: bool = False,
                serve_dtype: str = "f32", compress: bool = False,
-               smoke: bool = False):
+               smoke: bool = False, serve_chunk: int = 1):
     """Lower + compile one cell; returns (record dict, compiled).
 
     ``smoke=True`` is the CI gate: the smoke-scale config, a shrunken
@@ -208,15 +211,19 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         mesh_tag = "2x16x16" if multi_pod else "16x16"
     if remat is not None:
         cfg = dataclasses.replace(cfg, remat=remat)
+    if smoke:
+        serve_chunk = min(serve_chunk, page_tokens)
     record = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
-              "kind": shape.kind, "serve_impl": serve_impl}
+              "kind": shape.kind, "serve_impl": serve_impl,
+              "serve_chunk": serve_chunk}
 
     with jax.set_mesh(mesh):
         t0 = time.monotonic()
         lowered = build_lowered(cfg, shape, mesh, serve_impl=serve_impl,
                                 microbatches=microbatches,
                                 page_tokens=page_tokens, multi_pod=multi_pod,
-                                serve_dtype=serve_dtype, compress=compress)
+                                serve_dtype=serve_dtype, compress=compress,
+                                serve_chunk=serve_chunk)
         t_lower = time.monotonic() - t0
         t0 = time.monotonic()
         compiled = lowered.compile()
@@ -245,7 +252,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             m = measure_cell(cfg, shape, mesh, serve_impl=serve_impl,
                              page_tokens=page_tokens,
                              microbatches=microbatches,
-                             serve_dtype=serve_dtype)
+                             serve_dtype=serve_dtype,
+                             serve_chunk=serve_chunk)
             n_chips = 512 if multi_pod else 256
             mf = model_flops_for(cfg, shape)
             rf = roofline_terms(m["flops_per_chip"], m["hbm_bytes_per_chip"],
@@ -259,7 +267,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 def run_cells(cells, *, multi_pod: bool, serve_impl: str, out_dir: Path,
               page_tokens: int = 128, measure: bool = False,
               microbatches: int = 1, serve_dtype: str = "f32",
-              compress: bool = False, smoke: bool = False):
+              compress: bool = False, smoke: bool = False,
+              serve_chunk: int = 1):
     out_dir.mkdir(parents=True, exist_ok=True)
     results = []
     for arch, shape_name in cells:
@@ -271,6 +280,8 @@ def run_cells(cells, *, multi_pod: bool, serve_impl: str, out_dir: Path,
             tag += f"__mb{microbatches}"
         if serve_dtype != "f32":
             tag += f"__{serve_dtype}"
+        if serve_chunk > 1:
+            tag += f"__c{serve_chunk}"
         path = out_dir / f"{tag}.json"
         try:
             record, _ = lower_cell(arch, shape_name, multi_pod=multi_pod,
@@ -278,7 +289,8 @@ def run_cells(cells, *, multi_pod: bool, serve_impl: str, out_dir: Path,
                                    page_tokens=page_tokens, measure=measure,
                                    microbatches=microbatches,
                                    serve_dtype=serve_dtype,
-                                   compress=compress, smoke=smoke)
+                                   compress=compress, smoke=smoke,
+                                   serve_chunk=serve_chunk)
             record["status"] = "ok"
             extra = ""
             if "roofline" in record:
@@ -302,6 +314,9 @@ def main() -> None:
     ap.add_argument("--arch", choices=ARCH_IDS)
     ap.add_argument("--shape", choices=[s.name for s in ALL_SHAPES])
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--sweep", action="store_true",
+                    help="all archs for the given --shape (multi-arch CI "
+                         "sweep; honors the DESIGN.md §6 skip table)")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--measure", action="store_true",
                     help="derive roofline terms via 2-point unrolled lowering")
@@ -310,6 +325,9 @@ def main() -> None:
     ap.add_argument("--page-tokens", type=int, default=128)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--serve-dtype", default="f32", choices=["f32", "bf16"])
+    ap.add_argument("--serve-chunk", type=int, default=1,
+                    help="chunked-prefill tokens per sequence per step for "
+                         "decode-kind cells (1 = steady-state decode)")
     ap.add_argument("--compress", action="store_true",
                     help="int8 pod-axis gradient compression (opt-in)")
     ap.add_argument("--smoke", action="store_true",
@@ -320,15 +338,19 @@ def main() -> None:
     if args.all:
         cells = [(a, s.name) for a in ARCH_IDS
                  for s in shapes_for(get_config(a))]
+    elif args.sweep:
+        assert args.shape, "--sweep needs --shape"
+        cells = [(a, args.shape) for a in ARCH_IDS
+                 if SHAPE_BY_NAME[args.shape] in shapes_for(get_config(a))]
     else:
-        assert args.arch and args.shape, "--arch/--shape or --all"
+        assert args.arch and args.shape, "--arch/--shape, --sweep, or --all"
         cells = [(args.arch, args.shape)]
     results = run_cells(cells, multi_pod=args.multi_pod,
                         serve_impl=args.serve_impl, out_dir=Path(args.out),
                         page_tokens=args.page_tokens, measure=args.measure,
                         microbatches=args.microbatches,
                         serve_dtype=args.serve_dtype, compress=args.compress,
-                        smoke=args.smoke)
+                        smoke=args.smoke, serve_chunk=args.serve_chunk)
     n_ok = sum(1 for r in results if r.get("status") == "ok")
     print(f"[dryrun] {n_ok}/{len(results)} cells OK")
     if n_ok < len(results):

@@ -24,6 +24,9 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--page-tokens", type=int, default=16)
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="prefill chunk size (0 = page_tokens: one page "
+                         "publish per chunk; 1 = token-at-a-time baseline)")
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -32,7 +35,8 @@ def main() -> None:
     api = build_model(cfg)
     params = init_params(api.init_specs(), jax.random.PRNGKey(args.seed))
     engine = ServingEngine(api, params, max_batch=args.max_batch,
-                           max_seq=args.max_seq, page_tokens=args.page_tokens)
+                           max_seq=args.max_seq, page_tokens=args.page_tokens,
+                           chunk_tokens=args.chunk_tokens or None)
     rng = np.random.default_rng(args.seed)
     t0 = time.monotonic()
     for _ in range(args.requests):
@@ -43,7 +47,7 @@ def main() -> None:
     dt = time.monotonic() - t0
     total_tokens = sum(len(r.output) for r in done)
     print(f"[serve] {len(done)} requests, {total_tokens} tokens in {dt:.2f}s "
-          f"({engine.steps} engine steps)")
+          f"({engine.steps} engine steps, chunk={engine.chunk})")
     print(f"[serve] pages relinked={engine.controller.pages_relinked} "
           f"CoW-copied={engine.controller.pages_copied} "
           f"pool utilization={engine.controller.utilization():.2%}")

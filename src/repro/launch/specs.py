@@ -38,17 +38,19 @@ def train_batch_specs(cfg: ModelConfig, shape: ShapeCfg) -> Dict[str, Any]:
     return batch
 
 
-def decode_specs(api: ModelAPI, shape: ShapeCfg,
-                 page_tokens: int = 128) -> Tuple[Any, Any]:
-    """(tokens, caches) stand-ins for serve_step: one new token against a
-    seq_len-deep KV cache/state."""
+def decode_specs(api: ModelAPI, shape: ShapeCfg, page_tokens: int = 128,
+                 chunk: int = 1) -> Tuple[Any, Any, Any]:
+    """(tokens, n_new, caches) stand-ins for the unified serve_step: a
+    C-token chunk (C=1 for steady-state decode) against a seq_len-deep KV
+    cache/state."""
     cfg = api.cfg
     B, S = shape.global_batch, shape.seq_len
     caches = jax.eval_shape(
         lambda: api.init_caches(B, S, page_tokens))
     # the dry run lowers the steady state: caches at depth S-1
-    tokens = sds((B, 1), jnp.int32)
-    return tokens, caches
+    tokens = sds((B, chunk), jnp.int32)
+    n_new = sds((B,), jnp.int32)
+    return tokens, n_new, caches
 
 
 def abstract_state(api: ModelAPI) -> Dict[str, Any]:
@@ -69,5 +71,5 @@ def input_specs(arch_cfg: ModelConfig, shape: ShapeCfg) -> Dict[str, Any]:
                 "state": abstract_state(api)}
     if shape.kind == "prefill":
         return {"batch": train_batch_specs(arch_cfg, shape)}
-    tokens, caches = decode_specs(api, shape)
-    return {"tokens": tokens, "caches": caches}
+    tokens, n_new, caches = decode_specs(api, shape)
+    return {"tokens": tokens, "n_new": n_new, "caches": caches}

@@ -2,9 +2,11 @@
 
 Each layer kind provides:
   * ``init``    -> ParamSpec tree (stackable across layers)
-  * ``train``   -> full-sequence causal forward (also used for prefill)
-  * ``decode``  -> single-token step over the paged KV pool
-                   (kernels.paged_attention + kernels.kv_append)
+  * ``train``   -> full-sequence causal forward (training / offline prefill)
+  * ``serve``   -> chunked serve step over the paged KV pool: up to C tokens
+                   per sequence appended + attended in one fixed-shape call
+                   (kernels.paged_attention_chunk + kernels.kv_append_chunk);
+                   decode is the C=1 degenerate slice
 
 Logical axes used for sharding rules: "embed" (d_model), "heads" (q heads x
 head_dim), "kv" (kv heads x head_dim), "mla_rank" (latent), "vocab".
@@ -18,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import attention as attention_op
-from ..kernels import kv_append, paged_attention
+from ..kernels import kv_append_chunk, paged_attention_chunk
 from .config import ModelConfig
 from .spec import ParamSpec
 
@@ -137,25 +139,39 @@ def cross_kv(p: Dict, cfg: ModelConfig, enc_out: jnp.ndarray):
     return k, v
 
 
-def gqa_decode(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
-               pool_k: jnp.ndarray, pool_v: jnp.ndarray,
-               page_table: jnp.ndarray, lengths: jnp.ndarray,
-               *, window: Optional[int] = None, use_rope: bool = True):
-    """One-token decode: append this token's K/V into the staging page, then
-    attend through the page table.  x: [B, 1, D].  Returns
-    (out [B, 1, D], new_pool_k, new_pool_v)."""
-    B = x.shape[0]
+def paged_chunk_ids(page_table: jnp.ndarray, lengths: jnp.ndarray,
+                    chunk: int, page_tokens: int):
+    """Per-token staging addresses for a chunk starting at ``lengths``.
+
+    Returns (positions [B, C], page_ids [B, C], slot_ids [B, C]).  Page
+    indices are clamped to the table row; unallocated entries are 0 — the
+    controller's reserved null page — so fixed-shape pad tokens beyond a
+    slot's valid count always land in allocated-but-unpublished staging
+    slots or the null page, never in published data (DESIGN.md §3.4)."""
+    pos = lengths[:, None] + jnp.arange(chunk, dtype=jnp.int32)[None, :]
+    pp = jnp.minimum(pos // page_tokens, page_table.shape[1] - 1)
+    page_ids = jax.vmap(lambda row, idx: row[idx])(page_table, pp)
+    slot_ids = pos % page_tokens
+    return pos, page_ids, slot_ids
+
+
+def gqa_serve(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+              pool_k: jnp.ndarray, pool_v: jnp.ndarray,
+              page_table: jnp.ndarray, lengths: jnp.ndarray,
+              *, window: Optional[int] = None, use_rope: bool = True):
+    """Chunked serve step: append this chunk's K/V into the staging page(s),
+    then attend through the page table with chunk-causal masking.
+    x: [B, C, D] (C=1 for decode).  Returns
+    (out [B, C, D], new_pool_k, new_pool_v)."""
+    B, C = x.shape[:2]
     T = pool_k.shape[1]
-    positions = lengths[:, None]                        # [B, 1]
+    positions, page_ids, slot_ids = paged_chunk_ids(page_table, lengths, C, T)
     q, k, v = _qkv(p, cfg, x, positions if use_rope else None, use_rope)
-    page_ids = jax.vmap(lambda row, l: row[l // T])(page_table, lengths)
-    slot_ids = lengths % T
-    pool_k = kv_append(pool_k, k[:, 0], page_ids, slot_ids)
-    pool_v = kv_append(pool_v, v[:, 0], page_ids, slot_ids)
-    out = paged_attention(q[:, 0], pool_k, pool_v, page_table, lengths + 1,
-                          window=window, softcap=cfg.attn_logit_softcap)
-    out = out[:, None]                                   # [B, 1, H, hd]
-    out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim) @ p["wo"].astype(cfg.dtype)
+    pool_k = kv_append_chunk(pool_k, k, page_ids, slot_ids)
+    pool_v = kv_append_chunk(pool_v, v, page_ids, slot_ids)
+    out = paged_attention_chunk(q, pool_k, pool_v, page_table, lengths,
+                                window=window, softcap=cfg.attn_logit_softcap)
+    out = out.reshape(B, C, cfg.n_heads * cfg.head_dim) @ p["wo"].astype(cfg.dtype)
     return out, pool_k, pool_v
 
 
@@ -215,39 +231,38 @@ def mla_train(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
     return out
 
 
-def mla_decode(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
-               pool_ckv: jnp.ndarray, page_table: jnp.ndarray,
-               lengths: jnp.ndarray):
-    """Latent-space paged decode: the pool stores c_kv ++ k_rope
+def mla_serve(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+              pool_ckv: jnp.ndarray, page_table: jnp.ndarray,
+              lengths: jnp.ndarray):
+    """Latent-space chunked paged serve: the pool stores c_kv ++ k_rope
     ([P, T, 1, R+dr]) — 576 floats/token instead of H*(dn+dv)=4096: the
-    most storage-efficient cell (DESIGN.md §6).
+    most storage-efficient cell (DESIGN.md §6).  x: [B, C, D] (C=1 decode).
 
     Attention is evaluated in latent space by absorbing w_uk into q
     (the standard MLA inference identity):  score = <q_nope W_uk^T, c_kv>.
     """
-    B = x.shape[0]
+    B, C = x.shape[:2]
     H = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     R = cfg.kv_lora_rank
     dt = cfg.dtype
     T = pool_ckv.shape[1]
-    positions = lengths[:, None]
+    positions, page_ids, slot_ids = paged_chunk_ids(page_table, lengths, C, T)
     q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
-    new_lat = jnp.concatenate([c_kv, k_rope], axis=-1)[:, 0][:, None, :]  # [B,1,R+dr]
-    page_ids = jax.vmap(lambda row, l: row[l // T])(page_table, lengths)
-    slot_ids = lengths % T
-    pool_ckv = kv_append(pool_ckv, new_lat, page_ids, slot_ids)
+    new_lat = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None, :]  # [B,C,1,R+dr]
+    pool_ckv = kv_append_chunk(pool_ckv, new_lat, page_ids, slot_ids)
 
-    # absorb: q_lat[h] = q_nope[h] @ w_uk[:, h]^T  -> [B, H, R]
+    # absorb: q_lat[h] = q_nope[h] @ w_uk[:, h]^T  -> [B, C, H, R]
     w_uk = p["w_uk"].astype(dt).reshape(R, H, dn)
-    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)
-    q_full = jnp.concatenate([q_lat, q_rope[:, 0]], axis=-1)  # [B, H, R+dr]
+    q_lat = jnp.einsum("bchd,rhd->bchr", q_nope, w_uk)
+    q_full = jnp.concatenate([q_lat, q_rope], axis=-1)        # [B, C, H, R+dr]
     # paged_attention scales by (R+dr)^-0.5; true MLA scale is (dn+dr)^-0.5
     q_full = q_full * ((R + dr) ** 0.5 / (dn + dr) ** 0.5)
     # keys are the latents themselves (+ shared rope part); values = latents
-    lat = paged_attention(q_full, pool_ckv, pool_ckv, page_table, lengths + 1)
-    lat = lat[..., :R]                                        # [B, H, R]
+    lat = paged_attention_chunk(q_full, pool_ckv, pool_ckv, page_table,
+                                lengths)
+    lat = lat[..., :R]                                        # [B, C, H, R]
     w_uv = p["w_uv"].astype(dt).reshape(R, H, dv)
-    out = jnp.einsum("bhr,rhd->bhd", lat, w_uv)
-    out = out.reshape(B, 1, H * dv) @ p["wo"].astype(dt)
+    out = jnp.einsum("bchr,rhd->bchd", lat, w_uv)
+    out = out.reshape(B, C, H * dv) @ p["wo"].astype(dt)
     return out, pool_ckv

@@ -2,8 +2,9 @@
 
 A *block* is one temporal-mixing layer + (for attention/recurrent kinds)
 one channel-mixing layer, pre-norm residual.  Blocks expose init/train/
-decode with a uniform cache protocol so lm.py can scan over heterogeneous
-layer patterns (hybrid archs) with stacked parameters.
+serve with a uniform cache protocol so lm.py can scan over heterogeneous
+layer patterns (hybrid archs) with stacked parameters; ``serve`` is the
+chunked multi-token step (decode = chunk of 1).
 
 Cache protocol per kind:
   attn    (pool_k, pool_v)  paged pools        (or (pool_ckv,) for MLA)
@@ -17,14 +18,14 @@ from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
 
-from .attention import (gqa_decode, gqa_init, gqa_train, mla_decode, mla_init,
+from .attention import (gqa_init, gqa_serve, gqa_train, mla_init, mla_serve,
                         mla_train)
 from .config import ModelConfig
 from .shardctx import constrain_batch
 from .layers import (moe_apply, moe_init, mlp_apply, mlp_init, norm_apply,
                      norm_init)
-from .ssm import (mamba2_decode, mamba2_init, mamba2_init_state, mamba2_train,
-                  rglru_decode, rglru_init, rglru_init_state, rglru_train)
+from .ssm import (mamba2_init, mamba2_init_state, mamba2_serve, mamba2_train,
+                  rglru_init, rglru_init_state, rglru_serve, rglru_train)
 
 
 def block_init(cfg: ModelConfig, kind: str) -> Dict:
@@ -69,23 +70,30 @@ def block_train(p: Dict, cfg: ModelConfig, kind: str, x: jnp.ndarray,
     raise ValueError(kind)
 
 
-def block_decode(p: Dict, cfg: ModelConfig, kind: str, x: jnp.ndarray,
-                 cache, page_table: Optional[jnp.ndarray],
-                 lengths: jnp.ndarray):
-    """x: [B, 1, D]. Returns (x, new_cache)."""
+def block_serve(p: Dict, cfg: ModelConfig, kind: str, x: jnp.ndarray,
+                cache, page_table: Optional[jnp.ndarray],
+                lengths: jnp.ndarray, n_new: jnp.ndarray):
+    """Chunked serve step.  x: [B, C, D]; ``lengths`` is the pre-chunk
+    sequence length and ``n_new`` the per-sequence valid-token count
+    (decode slots pass 1, idle slots 0).  Returns (x, new_cache).
+
+    Attention pools need no validity mask — pad tokens' K/V land in
+    unpublished staging slots the extent walk never reads; recurrent/SSM
+    state is the one cache that mutates in place, so it advances only
+    through the first n_new tokens."""
     if kind == "attn":
         h = norm_apply(p["norm1"], cfg, x)
         if cfg.mla:
             (pool_ckv,) = cache
-            h, pool_ckv = mla_decode(p["attn"], cfg, h, pool_ckv, page_table,
-                                     lengths)
+            h, pool_ckv = mla_serve(p["attn"], cfg, h, pool_ckv, page_table,
+                                    lengths)
             new_cache = (pool_ckv,)
         else:
             pool_k, pool_v = cache
-            h, pool_k, pool_v = gqa_decode(p["attn"], cfg, h, pool_k, pool_v,
-                                           page_table, lengths,
-                                           window=cfg.attn_window,
-                                           use_rope=cfg.rope_theta is not None)
+            h, pool_k, pool_v = gqa_serve(p["attn"], cfg, h, pool_k, pool_v,
+                                          page_table, lengths,
+                                          window=cfg.attn_window,
+                                          use_rope=cfg.rope_theta is not None)
             new_cache = (pool_k, pool_v)
         x = x + h
         h = norm_apply(p["norm2"], cfg, x)
@@ -93,13 +101,13 @@ def block_decode(p: Dict, cfg: ModelConfig, kind: str, x: jnp.ndarray,
         return x + h, new_cache
     if kind == "rec":
         h = norm_apply(p["norm1"], cfg, x)
-        h, state = rglru_decode(p["rec"], cfg, h, cache)
+        h, state = rglru_serve(p["rec"], cfg, h, cache, n_new)
         x = x + h
         h = norm_apply(p["norm2"], cfg, x)
         return x + mlp_apply(p["mlp"], cfg, h), state
     if kind == "ssm":
         h = norm_apply(p["norm1"], cfg, x)
-        h, state = mamba2_decode(p["ssm"], cfg, h, cache)
+        h, state = mamba2_serve(p["ssm"], cfg, h, cache, n_new)
         return x + h, state
     raise ValueError(kind)
 

@@ -104,6 +104,17 @@ class ModelConfig:
     def has_decode_step(self) -> bool:
         return True  # encoder-only archs would return False; all 10 decode
 
+    def kv_pages_per_seq(self, max_seq: int, page_tokens: int) -> int:
+        """THE pool-sizing formula (single source: init_caches, the
+        engine's KVGeometry, and the dry-run all derive from here).  One
+        page chain per sequence; windowed attention bounds the chain by
+        the window, not the sequence (the relink-to-free-list analogue)."""
+        if self.family == "encdec" or self.attn_window is None:
+            eff = max_seq
+        else:
+            eff = min(max_seq, self.attn_window + page_tokens)
+        return -(-eff // page_tokens)
+
     def pattern_for_layers(self) -> Tuple[str, ...]:
         """Expand block_pattern over n_layers (hybrid archs)."""
         if not self.block_pattern:

@@ -19,7 +19,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .attention import cross_kv, gqa_cross, gqa_decode, gqa_init, gqa_train
+from .attention import cross_kv, gqa_cross, gqa_init, gqa_serve, gqa_train
 from .blocks import block_cache_init
 from .config import ModelConfig
 from .layers import mlp_apply, mlp_init, norm_apply, norm_init
@@ -127,7 +127,7 @@ def encdec_loss(params: Dict, cfg: ModelConfig, frames: jnp.ndarray,
 
 def encdec_init_caches(cfg: ModelConfig, batch: int, max_seq: int,
                        page_tokens: int = 128) -> Dict:
-    pages_per_seq = -(-max_seq // page_tokens)
+    pages_per_seq = cfg.kv_pages_per_seq(max_seq, page_tokens)
     num_pages = batch * pages_per_seq
     one = block_cache_init(cfg, "attn", batch, num_pages, page_tokens)
     # drop the mlp/moe part of the generic cache: we only need pools
@@ -157,24 +157,27 @@ def encdec_prefill_cross(params: Dict, cfg: ModelConfig,
     return ks, vs
 
 
-def encdec_decode_step(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
-                       caches: Dict) -> Tuple[jnp.ndarray, Dict]:
-    """tokens [B, 1] -> (logits, caches)."""
+def encdec_serve_step(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                      caches: Dict, n_new: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+    """Unified chunked serve step: tokens [B, C] (tokens[b, :n_new[b]]
+    valid) -> (logits [B, C, V], caches with lengths + n_new).  Decode is
+    the C=1 slice."""
     page_table = caches["page_table"]
     lengths = caches["lengths"]
-    # per-sequence sinusoidal position at the current length
+    C = tokens.shape[1]
+    # per-token sinusoidal positions lengths[b] .. lengths[b]+C-1
     D = cfg.d_model
+    pos = lengths[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
     dim = jnp.arange(D // 2, dtype=jnp.float32)[None, None, :]
-    ang = lengths[:, None, None].astype(jnp.float32) / jnp.power(
-        10000.0, 2 * dim / D)
-    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    ang = pos[..., None].astype(jnp.float32) / jnp.power(10000.0, 2 * dim / D)
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)  # [B, C, D]
     x = params["embed"].astype(cfg.dtype)[tokens] + pe.astype(cfg.dtype)
 
     def layer(h, xs):
         p, (pool_k, pool_v), ck, cv = xs
         a = norm_apply(p["norm1"], cfg, h)
-        a, pool_k, pool_v = gqa_decode(p["self_attn"], cfg, a, pool_k, pool_v,
-                                       page_table, lengths, use_rope=False)
+        a, pool_k, pool_v = gqa_serve(p["self_attn"], cfg, a, pool_k, pool_v,
+                                      page_table, lengths, use_rope=False)
         h = h + a
         a = norm_apply(p["norm2"], cfg, h)
         h = h + gqa_cross(p["cross_attn"], cfg, a, ck, cv)
@@ -186,4 +189,4 @@ def encdec_decode_step(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
         (params["decoder"], caches["pools"], caches["cross_k"], caches["cross_v"]))
     x = norm_apply(params["final_norm"], cfg, x)
     logits = x @ params["embed"].astype(cfg.dtype).T
-    return logits, {**caches, "pools": new_pools, "lengths": lengths + 1}
+    return logits, {**caches, "pools": new_pools, "lengths": lengths + n_new}

@@ -15,7 +15,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .blocks import block_cache_init, block_decode, block_init, block_train
+from .blocks import block_cache_init, block_init, block_serve, block_train
 from .config import ModelConfig
 from .layers import norm_apply, norm_init
 from .shardctx import constrain_batch
@@ -147,15 +147,14 @@ def lm_loss(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
 def lm_init_caches(cfg: ModelConfig, batch: int, max_seq: int,
                    page_tokens: int = 128,
                    pages_per_seq: Optional[int] = None) -> Dict:
-    """Zeroed decode caches.  Pool sizing: one private page chain per
-    sequence (the engine's PagedKVCache may share pages; the compiled step
-    only sees arrays + tables).  For windowed layers the pool is bounded by
-    the window, not the sequence (the relink-to-free-list analogue)."""
+    """Zeroed decode caches.  Pool sizing comes from
+    ``cfg.kv_pages_per_seq`` — the same single-source formula the engine's
+    ``api.kv_geometry`` uses, so controller metadata and device pools can
+    never disagree.  (The engine's PagedKVCache may share pages; the
+    compiled step only sees arrays + tables.)"""
     pattern, n_full, tail = _pattern_groups(cfg)
     if pages_per_seq is None:
-        eff = max_seq if cfg.attn_window is None else min(
-            max_seq, cfg.attn_window + page_tokens)
-        pages_per_seq = -(-eff // page_tokens)
+        pages_per_seq = cfg.kv_pages_per_seq(max_seq, page_tokens)
     num_pages = max(batch * pages_per_seq, 1)
 
     def stack_caches(kind: str, n: int):
@@ -175,9 +174,13 @@ def lm_init_caches(cfg: ModelConfig, batch: int, max_seq: int,
     return caches
 
 
-def lm_decode_step(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
-                   caches: Dict) -> Tuple[jnp.ndarray, Dict]:
-    """tokens: [B, 1] -> (logits [B, 1, V], new caches with lengths+1)."""
+def lm_serve_step(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                  caches: Dict, n_new: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+    """Unified chunked serve step (prefill chunks AND decode in one
+    fixed-shape program).  tokens: [B, C] with tokens[b, :n_new[b]] valid;
+    positions run lengths[b] .. lengths[b]+C-1.  Returns
+    (logits [B, C, V], new caches with lengths + n_new).  Decode is the
+    degenerate C-slice: n_new == 1 and only logits[:, 0] meaningful."""
     pattern, n_full, tail = _pattern_groups(cfg)
     page_table = caches["page_table"]
     lengths = caches["lengths"]
@@ -197,8 +200,8 @@ def lm_decode_step(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
                 lambda a: jax.lax.dynamic_index_in_dim(a, layer_idx, 0,
                                                        keepdims=False),
                 gcaches[key])
-            h, out_i = block_decode(gp[key], cfg, kind, h, gc_i,
-                                    page_table, lengths)
+            h, out_i = block_serve(gp[key], cfg, kind, h, gc_i,
+                                   page_table, lengths, n_new)
             new_gc[key] = jax.tree.map(
                 lambda full, upd: jax.lax.dynamic_update_index_in_dim(
                     full, upd, layer_idx, 0),
@@ -206,7 +209,7 @@ def lm_decode_step(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
         return (h, new_gc), None
 
     new_caches: Dict[str, Any] = {"page_table": page_table,
-                                  "lengths": lengths + 1}
+                                  "lengths": lengths + n_new}
     if n_full:
         (x, new_group), _ = maybe_scan(
             group_fn, (x, caches["group"]),
@@ -217,8 +220,8 @@ def lm_decode_step(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
     new_caches["tail"] = {}
     for i, kind in enumerate(tail):
         key = f"t{i}_{kind}"
-        x, new_caches["tail"][key] = block_decode(
+        x, new_caches["tail"][key] = block_serve(
             params["tail"][key], cfg, kind, x, caches["tail"][key],
-            page_table, lengths)
+            page_table, lengths, n_new)
     x = norm_apply(params["final_norm"], cfg, x)
     return unembed(params, cfg, x), new_caches

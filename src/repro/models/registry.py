@@ -1,6 +1,18 @@
 """Uniform model API over the three structural families (decoder-only LM,
 encoder-decoder, VLM-stub LM).  Everything downstream (train_step builder,
-serving engine, dry-run) talks to this interface only."""
+serving engine, dry-run) talks to this interface only.
+
+The serving surface is ONE unified multi-token step:
+
+    serve_step(params, tokens [B, C], caches, n_new [B])
+        -> (logits [B, C, V], new caches)
+
+which processes up to C new tokens per sequence per call (chunked prefill);
+decode is the degenerate C=1 slice (``decode_step`` below).  The model API
+also OWNS the KV pool geometry (``kv_geometry``): the engine sizes its
+controller from the same formula ``init_caches`` sizes the pools — never by
+inferring the pool from a (possibly sparse) initial page table.
+"""
 
 from __future__ import annotations
 
@@ -12,6 +24,7 @@ import jax.numpy as jnp
 from . import encdec as ed
 from . import lm
 from .config import ModelConfig
+from ..core.kvcache import KVGeometry
 
 
 @dataclass(frozen=True)
@@ -21,10 +34,32 @@ class ModelAPI:
     loss: Callable[..., jnp.ndarray]           # (params, batch) -> scalar
     logits: Callable[..., jnp.ndarray]         # (params, batch) -> [B, S, V]
     init_caches: Callable[..., Dict]           # (batch, max_seq, page_tokens)
-    decode_step: Callable[..., Any]            # (params, tokens, caches)
+    serve_step: Callable[..., Any]             # (params, tokens[B,C], caches, n_new[B])
+    kv_geometry: Callable[..., KVGeometry]     # (max_batch, max_seq, page_tokens)
+
+    def decode_step(self, params, tokens, caches):
+        """Single-token decode: the C=1 slice of the unified serve_step."""
+        n_new = jnp.ones((tokens.shape[0],), jnp.int32)
+        return self.serve_step(params, tokens, caches, n_new)
+
+
+def _kv_geometry(cfg: ModelConfig, max_batch: int, max_seq: int,
+                 page_tokens: int) -> KVGeometry:
+    """Pool geometry matching ``init_caches``' sizing exactly — both
+    derive from ``cfg.kv_pages_per_seq``, so they cannot drift.  Page 0 of
+    the pool is the controller-reserved null page (DESIGN.md §3.4); the
+    one-page capacity cost is deliberate: growing the pool by +1 instead
+    would break the page-dim divisibility ``dist.sharding.cache_specs``
+    needs to shard pages over the batch axes at production scale."""
+    pages_per_seq = cfg.kv_pages_per_seq(max_seq, page_tokens)
+    return KVGeometry(num_pages=max(max_batch * pages_per_seq, 1),
+                      page_tokens=page_tokens, max_seqs=max_batch,
+                      pages_per_seq=pages_per_seq)
 
 
 def build_model(cfg: ModelConfig) -> ModelAPI:
+    geometry = lambda b, s, pt=128: _kv_geometry(cfg, b, s, pt)
+
     if cfg.family == "encdec":
         return ModelAPI(
             cfg=cfg,
@@ -35,7 +70,8 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
                                                 ed.encode(p, cfg, b["frames"])),
             init_caches=lambda batch, max_seq, page_tokens=128:
                 ed.encdec_init_caches(cfg, batch, max_seq, page_tokens),
-            decode_step=lambda p, t, c: ed.encdec_decode_step(p, cfg, t, c),
+            serve_step=lambda p, t, c, n: ed.encdec_serve_step(p, cfg, t, c, n),
+            kv_geometry=geometry,
         )
 
     if cfg.family == "vlm":
@@ -61,7 +97,8 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
                                              prefix_embeds=b["patch_embeds"]),
             init_caches=lambda batch, max_seq, page_tokens=128:
                 lm.lm_init_caches(cfg, batch, max_seq, page_tokens),
-            decode_step=lambda p, t, c: lm.lm_decode_step(p, cfg, t, c),
+            serve_step=lambda p, t, c, n: lm.lm_serve_step(p, cfg, t, c, n),
+            kv_geometry=geometry,
         )
 
     # dense / moe / ssm / hybrid decoder-only LMs
@@ -72,5 +109,6 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
         logits=lambda p, b: lm.lm_logits(p, cfg, b["tokens"]),
         init_caches=lambda batch, max_seq, page_tokens=128:
             lm.lm_init_caches(cfg, batch, max_seq, page_tokens),
-        decode_step=lambda p, t, c: lm.lm_decode_step(p, cfg, t, c),
+        serve_step=lambda p, t, c, n: lm.lm_serve_step(p, cfg, t, c, n),
+        kv_geometry=geometry,
     )

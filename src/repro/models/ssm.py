@@ -171,6 +171,37 @@ def mamba2_init_state(cfg: ModelConfig, batch: int):
     }
 
 
+def _masked_state_scan(decode_fn, u: jnp.ndarray, state, n_new: jnp.ndarray):
+    """Run a single-token recurrent ``decode_fn`` over the C tokens of a
+    serve chunk, committing the state only for tokens ``c < n_new[b]`` —
+    fixed-shape pad tokens (and idle slots with n_new == 0) produce garbage
+    *outputs* but never advance the recurrence.  This is the state-cache
+    analogue of the attention pools' unpublished-staging-slot invariant.
+    Returns (outputs [B, C, D], final state)."""
+    C = u.shape[1]
+
+    def step(st, xs):
+        u_c, c = xs
+        out, new_st = decode_fn(u_c[:, None, :], st)
+        keep = c < n_new                                        # [B]
+        merged = jax.tree.map(
+            lambda nw, od: jnp.where(
+                keep.reshape((-1,) + (1,) * (nw.ndim - 1)), nw, od),
+            new_st, st)
+        return merged, out[:, 0]
+
+    state, ys = maybe_scan(
+        step, state, (jnp.moveaxis(u, 1, 0), jnp.arange(C, dtype=jnp.int32)))
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def mamba2_serve(p: Dict, cfg: ModelConfig, u: jnp.ndarray, state: Dict,
+                 n_new: jnp.ndarray):
+    """Chunked serve step: C masked single-token updates.  u: [B, C, D]."""
+    return _masked_state_scan(
+        lambda u_c, st: mamba2_decode(p, cfg, u_c, st), u, state, n_new)
+
+
 def mamba2_decode(p: Dict, cfg: ModelConfig, u: jnp.ndarray, state: Dict):
     """Single-token recurrent step. u: [B, 1, D]."""
     d = mamba2_dims(cfg)
@@ -264,6 +295,13 @@ def rglru_init_state(cfg: ModelConfig, batch: int):
         "conv": jnp.zeros((batch, 3, L), cfg.dtype),
         "h": jnp.zeros((batch, L), jnp.float32),
     }
+
+
+def rglru_serve(p: Dict, cfg: ModelConfig, u: jnp.ndarray, state: Dict,
+                n_new: jnp.ndarray):
+    """Chunked serve step: C masked single-token updates.  u: [B, C, D]."""
+    return _masked_state_scan(
+        lambda u_c, st: rglru_decode(p, cfg, u_c, st), u, state, n_new)
 
 
 def rglru_decode(p: Dict, cfg: ModelConfig, u: jnp.ndarray, state: Dict):

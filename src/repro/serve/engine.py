@@ -1,15 +1,27 @@
 """Continuous-batching serving engine over the paged KV store.
 
 The split architecture at serving time (DESIGN.md §3.4):
-  * data plane: ONE compiled decode_step over fixed-shape pool arrays —
-    never retraced, never reallocated (the pre-fault + mmap-cache analogue);
+  * data plane: ONE compiled fixed-shape ``serve_step(tokens[B, C],
+    n_new[B])`` over the pool arrays — never retraced, never reallocated
+    (the pre-fault + mmap-cache analogue).  Each step processes up to C new
+    tokens per slot: prefill consumes the prompt chunk-by-chunk, decode is
+    the degenerate n_new=1 slice of the SAME program, and mixed
+    prefill/decode batches are one call.  C defaults to ``page_tokens``, so
+    a full prefill chunk fills exactly one KV page and costs exactly ONE
+    metadata publish — the chunk/page invariant (DESIGN.md §3.4/§8).
   * control plane: this engine + core.kvcache.PagedKVCache do *metadata
-    only* — slot admission, page allocation (pre-allocated free list),
-    publish-on-page-fill (relink), refcounted prefix sharing, CoW forks.
+    only* — slot admission, per-slot chunk cursors, bulk page allocation
+    (pre-allocated free list), publish-on-page-fill via
+    ``PagedKVCache.commit`` (relink; one 64 B ``OP_KV_COMMIT`` oplog entry
+    per page in STRICT mode), refcounted prefix sharing, CoW forks.
 
-Prompt ingestion is chunked through the same decode path (token-at-a-time
-on this CPU host; the TPU deployment fuses prefill — DESIGN.md §8 notes the
-difference).  Sampling is greedy or top-k on the host.
+The controller is AUTHORITATIVE for the device page table: the engine
+mirrors controller rows into the device array whenever metadata changes.
+Pool geometry comes from ``api.kv_geometry`` — the same formula that sizes
+the pools — never from inspecting an initial page table (which under-sizes
+the pool when the table is sparse).
+
+Sampling is greedy or softmax on the host.
 """
 
 from __future__ import annotations
@@ -22,7 +34,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.kvcache import KVGeometry, PagedKVCache
+from ..core.kvcache import PagedKVCache
+from ..core.modes import Mode
+from ..core.oplog import OpLog
 from ..models.registry import ModelAPI
 
 
@@ -34,14 +48,9 @@ class Request:
     output: List[int] = field(default_factory=list)
     slot: Optional[int] = None
     seq_id: Optional[int] = None
-    prompt_pos: int = 0
+    prompt_pos: int = 0                  # per-slot chunk cursor
     done: bool = False
-
-    @property
-    def next_input(self) -> int:
-        if self.prompt_pos < len(self.prompt):
-            return self.prompt[self.prompt_pos]
-        return self.output[-1] if self.output else 0
+    truncated: bool = False              # finished early (pool backpressure)
 
     @property
     def in_prefill(self) -> bool:
@@ -51,23 +60,29 @@ class Request:
 class ServingEngine:
     def __init__(self, api: ModelAPI, params, *, max_batch: int = 8,
                  max_seq: int = 512, page_tokens: int = 16,
-                 greedy: bool = True, seed: int = 0) -> None:
+                 chunk_tokens: Optional[int] = None, greedy: bool = True,
+                 seed: int = 0, mode: Mode = Mode.POSIX,
+                 oplog: Optional[OpLog] = None) -> None:
         self.api = api
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.page_tokens = page_tokens
+        # C == page_tokens by default: one full chunk == one page == one
+        # publish; chunk_tokens=1 recovers the token-at-a-time baseline
+        self.chunk = int(chunk_tokens) if chunk_tokens else page_tokens
         self.greedy = greedy
         self.rng = np.random.default_rng(seed)
         self.caches = api.init_caches(max_batch, max_seq, page_tokens)
-        pages_per_seq = self.caches["page_table"].shape[1] \
-            if "page_table" in self.caches else -(-max_seq // page_tokens)
-        self.controller = PagedKVCache(KVGeometry(
-            num_pages=int(np.asarray(self.caches["page_table"]).max()) + 1
-            if "page_table" in self.caches else max_batch * pages_per_seq,
-            page_tokens=page_tokens, max_seqs=max_batch,
-            pages_per_seq=pages_per_seq))
-        self._step_fn = jax.jit(api.decode_step)
+        geom = api.kv_geometry(max_batch, max_seq, page_tokens)
+        if "page_table" in self.caches:
+            assert tuple(self.caches["page_table"].shape) == \
+                (max_batch, geom.pages_per_seq), "geometry/pool mismatch"
+        self.controller = PagedKVCache(geom, mode=mode, oplog=oplog)
+        # hard per-slot token cap: the fixed-shape step addresses positions
+        # up to lengths + C - 1, which must stay inside the page-table row
+        self._cap = min(max_seq - 1, geom.max_tokens_per_seq - self.chunk)
+        self._step_fn = jax.jit(api.serve_step)
         self.waiting: List[Request] = []
         self.active: Dict[int, Request] = {}     # slot -> request
         self.finished: List[Request] = []
@@ -77,6 +92,25 @@ class ServingEngine:
     # ------------------------------------------------------------------ API
 
     def submit(self, prompt: List[int], max_new_tokens: int = 16) -> Request:
+        if not prompt:
+            raise ValueError("empty prompt")
+        # statically infeasible prompts are rejected here; prompts that fit
+        # but contend for pages at runtime go through backpressure and come
+        # back flagged ``truncated`` instead.  Bounds: every prefill chunk
+        # starts at a multiple of C and addresses pad positions up to
+        # start + C - 1 (whole-chunk floor of the page-table row), and a
+        # lone sequence can allocate at most the usable pool (num_pages
+        # minus the reserved null page).
+        g = self.controller.geom
+        limit = min(self.max_seq - 1,
+                    (g.max_tokens_per_seq // self.chunk) * self.chunk,
+                    min(g.pages_per_seq, g.num_pages - 1) * g.page_tokens)
+        if len(prompt) > limit:
+            # a prompt that can never stage must be rejected at admission —
+            # raising mid-step would abort every request in the batch
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens exceeds the per-slot "
+                f"capacity of {limit} (pool geometry / window bound)")
         req = Request(next(self._rid), list(prompt), max_new_tokens)
         self.waiting.append(req)
         return req
@@ -95,42 +129,80 @@ class ServingEngine:
             req = self.waiting.pop(0)
             req.slot = slot
             req.seq_id = self.controller.create_seq()
-            # slot/seq alignment: the engine allocates sequence slots in the
-            # same order as cache rows; reset the device length row
-            lengths = np.asarray(self.caches["lengths"]).copy()
-            lengths[slot] = 0
-            self.caches["lengths"] = jnp.asarray(lengths)
+            self._set_device_length(slot, 0)
+            self._zero_slot_state(slot)
             self.active[slot] = req
 
     def step(self) -> None:
         self._admit()
         if not self.active:
             return
-        tokens = np.zeros((self.max_batch, 1), np.int32)
-        for slot, req in self.active.items():
-            tokens[slot, 0] = req.next_input
-            # controller metadata: reserve capacity (page alloc on fill)
-            cur = int(np.asarray(self.caches["lengths"])[slot])
-            self.controller.ensure_capacity(req.seq_id, cur + 1)
+        B = self.max_batch
+        # decode-only batches run the WIDTH-1 slice of the same jitted
+        # step (jax caches one executable per shape: one prefill program,
+        # one decode program — still never retraced), so steady-state
+        # decode never pays the C-wide compute for 1 valid token
+        C = self.chunk if any(r.in_prefill for r in self.active.values()) \
+            else 1
+        tokens = np.zeros((B, C), np.int32)
+        n_new = np.zeros((B,), np.int32)
+        feeds: Dict[int, int] = {}
+        for slot, req in list(self.active.items()):
+            total = self.controller.seq_length(req.seq_id)
+            if req.in_prefill:
+                take = min(C, len(req.prompt) - req.prompt_pos)
+                feed = req.prompt[req.prompt_pos:req.prompt_pos + take]
+            else:
+                take = 1
+                feed = [req.output[-1]]
+            # backpressure: only the VALID tokens need pages (pad positions
+            # fall back to the null page when the over-reserve can't be
+            # had); a chunk that cannot even stage its valid tokens
+            # finishes the request — flagged truncated — instead of
+            # stalling the whole batch
+            if self.controller.pages_needed(req.seq_id, total + take) > \
+                    self.controller.num_free_pages:
+                req.truncated = True
+                self._finish(slot, req)
+                continue
+            tokens[slot, :take] = feed
+            n_new[slot] = take
+            feeds[slot] = take
+            # metadata: reserve the FULL chunk's staging slots (pad tokens
+            # land in allocated-but-unpublished slots), advance by the valid
+            # count, publish (commit + oplog) every page the chunk filled
+            self.controller.append_tokens(req.seq_id, take, reserve=C)
+        if not feeds:
+            return
 
+        self._sync_page_table()
         logits, self.caches = self._step_fn(self.params, jnp.asarray(tokens),
-                                            self.caches)
-        logits = np.asarray(logits)[:, -1, :]
+                                            self.caches, jnp.asarray(n_new))
+        logits = np.asarray(logits)
         self.steps += 1
 
-        for slot, req in list(self.active.items()):
-            self.controller.advance(req.seq_id, 1)
+        for slot, take in feeds.items():
+            req = self.active[slot]
             if req.in_prefill:
-                req.prompt_pos += 1
-                continue
-            tok = self._sample(logits[slot])
+                req.prompt_pos += take
+                if req.in_prefill:
+                    continue              # more prompt chunks to go
+            # the chunk's last valid position predicts the next token: the
+            # final prefill chunk yields the first generated token for free
+            tok = self._sample(logits[slot, take - 1])
             req.output.append(tok)
-            total = int(np.asarray(self.caches["lengths"])[slot])
-            if len(req.output) >= req.max_new_tokens or total >= self.max_seq - 1:
-                req.done = True
-                self.finished.append(req)
-                self.controller.free_seq(req.seq_id)
-                del self.active[slot]
+            total = self.controller.seq_length(req.seq_id)
+            if len(req.output) >= req.max_new_tokens:
+                self._finish(slot, req)
+            elif total >= self._cap:
+                req.truncated = True        # capacity-bound, not completed
+                self._finish(slot, req)
+
+    def _finish(self, slot: int, req: Request) -> None:
+        req.done = True
+        self.finished.append(req)
+        self.controller.free_seq(req.seq_id)
+        del self.active[slot]
 
     def _sample(self, row: np.ndarray) -> int:
         if self.greedy:
@@ -140,11 +212,62 @@ class ServingEngine:
         p /= p.sum()
         return int(self.rng.choice(len(row), p=p))
 
+    # ------------------------------------------------------------------ device mirrors
+
+    def _sync_page_table(self) -> None:
+        """Mirror the controller's extent maps into the device page table.
+        Inactive rows stay 0 = the reserved null page, so their fixed-shape
+        pad writes are harmless by construction."""
+        if "page_table" not in self.caches:
+            return
+        ctrl = self.controller.page_table()
+        pt = np.zeros_like(ctrl[:self.max_batch])
+        for slot, req in self.active.items():
+            pt[slot] = ctrl[req.seq_id]
+        self.caches["page_table"] = jnp.asarray(pt)
+
+    def _set_device_length(self, slot: int, value: int) -> None:
+        lengths = np.asarray(self.caches["lengths"]).copy()
+        lengths[slot] = value
+        self.caches["lengths"] = jnp.asarray(lengths)
+
+    def _walk_state(self, fn) -> None:
+        """Apply ``fn(leaf, batch_dim) -> leaf`` to every recurrent/SSM
+        state leaf (cache sub-dicts keyed conv/h/ssd; stacked group leaves
+        carry a leading layer dim)."""
+        def rewrite(node, batch_dim):
+            if isinstance(node, dict):
+                if set(node) <= {"conv", "h", "ssd"}:
+                    return {k: fn(v, batch_dim) for k, v in node.items()}
+                return {k: rewrite(v, batch_dim) for k, v in node.items()}
+            return node
+
+        for key, batch_dim in (("group", 1), ("tail", 0)):
+            if key in self.caches:
+                self.caches[key] = rewrite(self.caches[key], batch_dim)
+
+    def _zero_slot_state(self, slot: int) -> None:
+        """A freshly admitted slot must not inherit the previous occupant's
+        recurrent state (pools need no reset — the extent walk only reads
+        published positions)."""
+        def zero(leaf, batch_dim):
+            idx = (slice(None),) * batch_dim + (slot,)
+            return leaf.at[idx].set(0)
+        self._walk_state(zero)
+
+    def _copy_slot_state(self, src: int, dst: int) -> None:
+        def copy(leaf, batch_dim):
+            idx_s = (slice(None),) * batch_dim + (src,)
+            idx_d = (slice(None),) * batch_dim + (dst,)
+            return leaf.at[idx_d].set(leaf[idx_s])
+        self._walk_state(copy)
+
     # ------------------------------------------------------------------ forking
 
     def fork(self, req: Request) -> Request:
-        """Zero-copy fork (beam/speculative): shares full pages by refcount;
-        the partially-filled tail page is CoW-copied on the device."""
+        """Zero-copy fork (beam/speculative): shares full pages by refcount
+        (hard links); the partially-filled tail page is CoW-copied on the
+        device using the page pair the controller allocates."""
         assert req.slot is not None and not req.done
         free_slots = [s for s in range(self.max_batch) if s not in self.active]
         if not free_slots:
@@ -156,49 +279,30 @@ class ServingEngine:
         child.slot = slot
         child.seq_id = self.controller.fork(req.seq_id)
         cow = self.controller.prepare_append(child.seq_id, 1)
-        # mirror controller metadata into the device tables
-        pt = np.asarray(self.caches["page_table"]).copy()
-        lengths = np.asarray(self.caches["lengths"]).copy()
-        ctrl_pt = self.controller.page_table()
-        # engine slots and controller sids are both dense ints; map directly
-        pt[slot, :] = pt[req.slot, :]
-        n_pages = len(ctrl_pt[child.seq_id][ctrl_pt[child.seq_id] != 0]) or 1
-        lengths[slot] = lengths[req.slot]
         if cow is not None:
-            src, dst = cow
-            pt[slot, (int(lengths[slot]) // self.page_tokens)] = \
-                pt[req.slot, (int(lengths[slot]) // self.page_tokens)]
-            self._copy_page_on_device(pt, slot, int(lengths[slot]))
-        self.caches["page_table"] = jnp.asarray(pt)
-        self.caches["lengths"] = jnp.asarray(lengths)
+            self._copy_page_on_device(*cow)
+        self._set_device_length(slot, self.controller.seq_length(child.seq_id))
+        self._copy_slot_state(req.slot, slot)
         self.active[slot] = child
+        self._sync_page_table()
         return child
 
-    def _copy_page_on_device(self, pt, slot: int, length: int) -> None:
+    def _copy_page_on_device(self, src_page: int, dst_page: int) -> None:
         """Give the fork a private copy of its tail page in every layer pool
         (the partial-block copy analogue — the only data movement a fork
         costs)."""
-        tail_idx = length // self.page_tokens
-        src_page = int(pt[slot, tail_idx])
-        # allocate a fresh device page: use the next never-used page id if
-        # available; otherwise fall back to sharing (read-only tail)
-        used = set(int(x) for x in pt.flatten())
-        pool_size = self._pool_size()
-        fresh = next((p for p in range(pool_size) if p not in used), None)
-        if fresh is None:
-            return
-        pt[slot, tail_idx] = fresh
-
         def copy_pool(leaf):
             if leaf.ndim == 5:      # [L, P, T, KV, hd]
-                return leaf.at[:, fresh].set(leaf[:, src_page])
+                return leaf.at[:, dst_page].set(leaf[:, src_page])
             if leaf.ndim == 4:      # [P, T, KV, hd]
-                return leaf.at[fresh].set(leaf[src_page])
+                return leaf.at[dst_page].set(leaf[src_page])
             return leaf
 
-        def walk(name, node):
+        def walk(node):
             if isinstance(node, dict):
-                return {k: walk(k, v) for k, v in node.items()}
+                if set(node) <= {"conv", "h", "ssd"}:
+                    return node     # recurrent state carries no pages
+                return {k: walk(v) for k, v in node.items()}
             if isinstance(node, tuple):
                 return tuple(copy_pool(x) if hasattr(x, "ndim") and x.ndim >= 4
                              else x for x in node)
@@ -206,25 +310,4 @@ class ServingEngine:
 
         for key in ("group", "tail", "pools"):
             if key in self.caches:
-                self.caches[key] = walk(key, self.caches[key])
-
-    def _pool_size(self) -> int:
-        def find(node):
-            if isinstance(node, dict):
-                for v in node.values():
-                    r = find(v)
-                    if r:
-                        return r
-            if isinstance(node, tuple):
-                for x in node:
-                    if hasattr(x, "ndim") and x.ndim == 5:
-                        return x.shape[1]
-                    if hasattr(x, "ndim") and x.ndim == 4:
-                        return x.shape[0]
-            return 0
-        for key in ("group", "tail", "pools"):
-            if key in self.caches:
-                r = find(self.caches[key])
-                if r:
-                    return r
-        return 0
+                self.caches[key] = walk(self.caches[key])

@@ -1,6 +1,11 @@
 """serve_step builders for the production mesh.
 
-Two distribution strategies for decode (the paper's data plane at scale):
+The built step is the unified chunked program
+``serve_step(params, tokens [B, C], caches, n_new [B])`` — prefill chunks,
+decode (n_new=1) and mixed batches are ONE compiled fixed shape
+(DESIGN.md §8).
+
+Two distribution strategies (the paper's data plane at scale):
 
   * ``gspmd``     — one jit; pools sharded by dist.sharding.cache_specs and
                     every gather/scatter left to the SPMD partitioner.  This
@@ -42,7 +47,9 @@ def make_serve_step(api: ModelAPI, mesh: Mesh, caches_like: Any,
                     *, variant: str = "gspmd", donate: bool = True):
     """Returns (serve_step, param_shardings, cache_shardings).
 
-    serve_step(params, tokens [B,1], caches) -> (logits, caches)."""
+    serve_step(params, tokens [B, C], caches, n_new [B]) ->
+    (logits [B, C, V], caches).  C is whatever the tokens argument carries
+    (the chunk size); decode passes C=1."""
     assert variant in ("gspmd", "shard_map")
     batch = caches_like["lengths"].shape[0] if "lengths" in caches_like else 0
     ba = fit_batch_axes(mesh, batch) if batch else batch_axes(mesh)
@@ -53,18 +60,15 @@ def make_serve_step(api: ModelAPI, mesh: Mesh, caches_like: Any,
     cache_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), cache_pspecs,
                             is_leaf=lambda x: isinstance(x, P))
     tok_sh = NamedSharding(mesh, P(ba if ba else None))
+    n_sh = NamedSharding(mesh, P(ba if ba else None))
 
     md = "model" if "model" in mesh.shape else None
     if variant == "gspmd":
-        def fn(params, tokens, caches):
+        def fn(params, tokens, caches, n_new):
             with serving_model_axis(md):
-                return api.decode_step(params, tokens, caches)
+                return api.serve_step(params, tokens, caches, n_new)
     else:
-        n_ba = 1
-        for a in ba:
-            n_ba *= mesh.shape[a]
-
-        def local_step(params, tokens, caches):
+        def local_step(params, tokens, caches, n_new):
             # page ids become shard-local: each data shard owns a contiguous
             # block of the page pool (private chains, engine-enforced)
             caches = dict(caches)
@@ -73,19 +77,19 @@ def make_serve_step(api: ModelAPI, mesh: Mesh, caches_like: Any,
             if local_pool is not None:
                 caches["page_table"] = pt % local_pool
             with serving_model_axis(md):
-                return api.decode_step(params, tokens, caches)
+                return api.serve_step(params, tokens, caches, n_new)
 
         manual_specs = jax.tree.map(_drop_model_axis, cache_pspecs,
                                     is_leaf=lambda x: isinstance(x, P))
         fn = jax.shard_map(
             local_step, mesh=mesh,
-            in_specs=(P(), P(ba), manual_specs),
+            in_specs=(P(), P(ba), manual_specs, P(ba)),
             out_specs=(P(ba), manual_specs),
             axis_names=set(ba), check_vma=False)
 
     donate_args = (2,) if donate else ()
     step = jax.jit(fn,
-                   in_shardings=(param_sh, tok_sh, cache_sh),
+                   in_shardings=(param_sh, tok_sh, cache_sh, n_sh),
                    out_shardings=(NamedSharding(mesh, P(ba if ba else None)),
                                   cache_sh),
                    donate_argnums=donate_args)

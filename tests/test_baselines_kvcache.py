@@ -85,6 +85,12 @@ def make_kv(num_pages=32, page_tokens=8, max_seqs=8, pages_per_seq=8):
                                    pages_per_seq=pages_per_seq))
 
 
+# page 0 is the reserved null page (never allocated), so a fresh pool of
+# ``num_pages`` physical pages exposes ``num_pages - 1`` allocatable ones
+def usable(num_pages):
+    return num_pages - 1
+
+
 def test_kv_basic_growth_and_publish():
     kv = make_kv()
     s = kv.create_seq()
@@ -107,7 +113,7 @@ def test_kv_fork_shares_then_cow():
     assert kv.pages_copied == 1
     kv.free_seq(s)
     kv.free_seq(c)
-    assert kv.num_free_pages == 32            # refcounts balanced
+    assert kv.num_free_pages == usable(32)    # refcounts balanced
 
 
 def test_kv_rollback_releases_pages():
@@ -115,10 +121,10 @@ def test_kv_rollback_releases_pages():
     s = kv.create_seq()
     kv.ensure_capacity(s, 40)
     kv.advance(s, 40)
-    used = 32 - kv.num_free_pages
+    used = usable(32) - kv.num_free_pages
     kv.rollback(s, 9)
     assert kv.seq_length(s) == 9
-    assert 32 - kv.num_free_pages < used
+    assert usable(32) - kv.num_free_pages < used
 
 
 def test_kv_pool_exhaustion():
@@ -132,7 +138,7 @@ def test_kv_pool_exhaustion():
                 min_size=1, max_size=60))
 @settings(max_examples=50, deadline=None)
 def test_kv_refcount_invariant(ops):
-    """Property: free pages + sum(live unique pages) == num_pages, and
+    """Property: free pages + sum(live unique pages) == usable pages, and
     freeing everything returns the pool to full."""
     kv = make_kv(num_pages=64, pages_per_seq=16, max_seqs=16)
     rng = np.random.default_rng(0)
@@ -160,4 +166,4 @@ def test_kv_refcount_invariant(ops):
         assert (kv._refcount >= 0).all()
     for s in live:
         kv.free_seq(s)
-    assert kv.num_free_pages == 64
+    assert kv.num_free_pages == usable(64)

@@ -1,0 +1,320 @@
+"""Chunked-prefill data plane: chunked vs token-at-a-time equivalence,
+the chunk/page publish invariant, STRICT-mode oplog commits, and crash-
+mid-prefill recovery by idempotent replay (DESIGN.md §3.4/§8)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import PMDevice
+from repro.core.kvcache import (KVGeometry, PagedKVCache, replay_kv_commits)
+from repro.core.modes import Mode
+from repro.core.oplog import OP_KV_COMMIT, OpLog
+from repro.models import build_model
+from repro.models.spec import init_params
+from repro.serve import ServingEngine
+
+PROMPT = [5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17]
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    api = build_model(cfg)
+    params = init_params(api.init_specs(), jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def fresh_oplog():
+    device = PMDevice(size=4 * 1024 * 1024)
+    return device, OpLog(device, base_block=1, num_blocks=16)
+
+
+# ---------------------------------------------------------------- equivalence
+
+
+def test_chunked_prefill_matches_token_at_a_time_logits(qwen):
+    """Model-level: one C-token serve_step chunk produces the same logits at
+    every prompt position as C single-token steps over the same pool."""
+    cfg, api, params = qwen
+    L, C = 9, 12
+    tokens = jnp.asarray([PROMPT[:L]], jnp.int32)
+    pt = np.zeros((1, 8), np.int32)
+    pt[0, :3] = [1, 2, 3]                       # controller-style real pages
+
+    caches = api.init_caches(1, 32, page_tokens=4)
+    caches["page_table"] = jnp.asarray(pt)
+    chunk_logits, chunk_caches = api.serve_step(
+        params, jnp.pad(tokens, ((0, 0), (0, C - L))), caches,
+        jnp.asarray([L], jnp.int32))
+
+    caches = api.init_caches(1, 32, page_tokens=4)
+    caches["page_table"] = jnp.asarray(pt)
+    step_logits = []
+    for t in range(L):
+        logits, caches = api.serve_step(params, tokens[:, t:t + 1], caches,
+                                        jnp.asarray([1], jnp.int32))
+        step_logits.append(logits[:, 0])
+    np.testing.assert_allclose(
+        np.asarray(chunk_logits[0, :L], np.float32),
+        np.asarray(jnp.stack(step_logits, 1)[0], np.float32),
+        atol=2e-2, rtol=2e-2)
+    # identical pool bytes at every written position, identical lengths
+    np.testing.assert_array_equal(np.asarray(chunk_caches["lengths"]),
+                                  np.asarray(caches["lengths"]))
+    # identical PUBLISHED page bytes (pages 1-2 hold positions 0..7; pad
+    # tokens only ever touch unpublished staging slots, which may differ)
+    for a, b in zip(jax.tree.leaves(chunk_caches), jax.tree.leaves(caches)):
+        if hasattr(a, "ndim") and a.ndim >= 4:      # KV pools
+            sl = (slice(None), slice(1, 3)) if a.ndim == 5 else slice(1, 3)
+            np.testing.assert_allclose(np.asarray(a[sl], np.float32),
+                                       np.asarray(b[sl], np.float32),
+                                       atol=2e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "mamba2-1.3b",
+                                  "recurrentgemma-9b"])
+def test_engine_chunked_equals_token_at_a_time(arch):
+    """Engine-level: identical outputs, lengths, and publish counts whether
+    the prompt is ingested C tokens or 1 token at a time."""
+    cfg = get_config(arch, smoke=True)
+    api = build_model(cfg)
+    params = init_params(api.init_specs(), jax.random.PRNGKey(0))
+    results, steps = {}, {}
+    for C in (1, 8):
+        eng = ServingEngine(api, params, max_batch=2, max_seq=64,
+                            page_tokens=8, chunk_tokens=C)
+        req = eng.submit(PROMPT, max_new_tokens=5)
+        eng.run_until_done()
+        results[C] = (req.output, eng.controller.pages_relinked)
+        steps[C] = eng.steps
+    assert results[1] == results[8]
+    # chunked prefill must take radically fewer engine steps than
+    # token-at-a-time for the same prompt
+    assert steps[8] < steps[1] - len(PROMPT) // 2
+
+
+def test_chunked_uses_fewer_steps_and_one_publish_per_chunk(qwen):
+    """The chunk/page invariant: C == page_tokens => each full prefill chunk
+    is exactly one page publish."""
+    cfg, api, params = qwen
+    eng = ServingEngine(api, params, max_batch=1, max_seq=128, page_tokens=16)
+    prompt = list(range(1, 65))                 # 64 tokens = 4 full chunks
+    req = eng.submit(prompt, max_new_tokens=1)
+    steps_before = eng.steps
+    while req.in_prefill:
+        eng.step()
+    prefill_steps = eng.steps - steps_before
+    assert prefill_steps == 4                   # 64 / 16
+    assert eng.controller.pages_relinked == 4   # one publish per chunk
+
+
+def test_mixed_prefill_decode_batch_matches_solo(qwen):
+    """A request decoding next to another request's prefill chunks must see
+    exactly the tokens it would see alone (slot isolation across mixed
+    n_new in one fixed-shape call)."""
+    cfg, api, params = qwen
+    alone = ServingEngine(api, params, max_batch=2, max_seq=64, page_tokens=8)
+    r1 = alone.submit(PROMPT[:5], max_new_tokens=6)
+    alone.run_until_done()
+
+    mixed = ServingEngine(api, params, max_batch=2, max_seq=64, page_tokens=8)
+    r2 = mixed.submit(PROMPT[:5], max_new_tokens=6)
+    mixed.step()                                # r2 prefill chunk alone
+    mixed.submit(PROMPT, max_new_tokens=4)      # second request joins late
+    mixed.run_until_done()
+    assert r1.output == r2.output
+
+
+# ---------------------------------------------------------------- geometry
+
+
+def test_pool_geometry_owned_by_model_api(qwen):
+    """api.kv_geometry must match the pools init_caches builds — and not
+    depend on the initial page table's contents (the old pool-sizing
+    inference under-allocated on sparse tables)."""
+    cfg, api, params = qwen
+    geom = api.kv_geometry(4, 64, 8)
+    caches = jax.eval_shape(lambda: api.init_caches(4, 64, 8))
+    assert caches["page_table"].shape == (4, geom.pages_per_seq)
+    pools = [a for a in jax.tree.leaves(caches) if a.ndim >= 4]
+    assert pools and all(
+        (a.shape[1] if a.ndim == 5 else a.shape[0]) == geom.num_pages
+        for a in pools)
+
+    # windowed archs bound the pool by the window, not the sequence
+    rg = build_model(get_config("recurrentgemma-9b", smoke=True))
+    g = rg.kv_geometry(2, 4096, 8)
+    assert g.pages_per_seq * 8 <= rg.cfg.attn_window + 2 * 8
+
+
+def test_submit_rejects_infeasible_prompts(qwen):
+    """Empty and over-capacity prompts are rejected at admission — a
+    mid-step failure would abort every other request in the batch."""
+    cfg, api, params = qwen
+    eng = ServingEngine(api, params, max_batch=2, max_seq=64, page_tokens=16)
+    with pytest.raises(ValueError):
+        eng.submit([])
+    with pytest.raises(ValueError):
+        eng.submit(list(range(1, 101)))          # 100 > 63 stageable tokens
+    ok = eng.submit(list(range(1, 60)), max_new_tokens=2)
+    eng.run_until_done()
+    assert ok.done and ok.output                 # near-capacity prompt serves
+
+
+def test_pool_sized_prompt_fully_ingested_despite_null_page(qwen):
+    """A prompt that uses every allocatable page (pool minus the null page)
+    must still prefill completely: the chunk's over-reserve is best-effort,
+    so backpressure may only fire when VALID tokens have nowhere to go —
+    and then it flags the request truncated instead of silently done."""
+    cfg, api, params = qwen
+    eng = ServingEngine(api, params, max_batch=1, max_seq=64, page_tokens=16)
+    geom = eng.controller.geom
+    usable_tokens = (geom.num_pages - 1) * geom.page_tokens      # null page
+    req = eng.submit(list(range(1, usable_tokens + 1)), max_new_tokens=4)
+    eng.run_until_done()
+    assert req.done and not req.in_prefill       # every prompt token staged
+    assert len(req.output) >= 1                  # first token sampled
+    # the decode tail ran out of pool capacity — flagged, never silent
+    if len(req.output) < req.max_new_tokens:
+        assert req.truncated
+
+
+# ---------------------------------------------------------------- STRICT mode
+
+
+def test_strict_prefill_logs_one_commit_per_page(qwen):
+    cfg, api, params = qwen
+    device, oplog = fresh_oplog()
+    eng = ServingEngine(api, params, max_batch=1, max_seq=64, page_tokens=8,
+                        mode=Mode.STRICT, oplog=oplog)
+    req = eng.submit(list(range(1, 25)), max_new_tokens=1)   # 24 tokens
+    while req.in_prefill:
+        eng.step()
+    entries = [e for e in oplog.scan() if e.op == OP_KV_COMMIT]
+    assert len(entries) == 3                    # 24 tokens = 3 full pages @8
+    assert [e.offset for e in entries] == [0, 1, 2]
+
+
+def test_strict_crash_mid_prefill_recovers_committed_pages(qwen):
+    """Crash recovery: replaying the oplog reconstructs EXACTLY the pages
+    committed before the crash — full pages only, never the partial tail
+    (unpublished staging is invisible, paper §5.3)."""
+    cfg, api, params = qwen
+    device, oplog = fresh_oplog()
+    eng = ServingEngine(api, params, max_batch=1, max_seq=128, page_tokens=8,
+                        mode=Mode.STRICT, oplog=oplog)
+    req = eng.submit(list(range(1, 45)), max_new_tokens=4)   # 44 tokens
+    eng.step()                                  # 8 tokens
+    eng.step()                                  # 16 tokens (2 full pages)
+    eng.step()                                  # 24
+    eng.step()                                  # 32
+    eng.step()                                  # 40: mid-prefill "crash"
+    expected = eng.controller.committed_extents(req.seq_id)
+    assert len(expected) == 5 and req.in_prefill
+
+    # recover from the persisted device: scan drops torn entries, replay is
+    # idempotent (applying the log twice converges)
+    recovered_log = OpLog(device, base_block=1, num_blocks=16, fresh=False)
+    entries = recovered_log.scan()
+    state = replay_kv_commits(entries)
+    state_twice = replay_kv_commits(list(entries) + list(entries))
+    assert state == state_twice
+    assert state[req.seq_id] == expected
+
+
+def test_strict_fork_prefix_share_and_cow_replay(qwen):
+    """Prefix-share + CoW-fork under STRICT: the fork's hard-link publishes
+    are logged, so replay reconstructs BOTH sequences' committed extents;
+    shared full pages stay shared, and the parent/child diverge safely."""
+    cfg, api, params = qwen
+    device, oplog = fresh_oplog()
+    eng = ServingEngine(api, params, max_batch=3, max_seq=64, page_tokens=8,
+                        mode=Mode.STRICT, oplog=oplog)
+    req = eng.submit(PROMPT, max_new_tokens=8)
+    eng.step()                                  # chunk 1: one full page
+    eng.step()                                  # chunk 2 (5 tokens) + sample
+    child = eng.fork(req)
+    assert eng.controller.pages_copied == 1     # shared partial tail -> CoW
+    parent_ext = eng.controller.committed_extents(req.seq_id)
+    child_ext = eng.controller.committed_extents(child.seq_id)
+    assert parent_ext == child_ext and len(parent_ext) == 1  # shared prefix
+
+    state = replay_kv_commits(oplog.scan())
+    assert state[req.seq_id] == parent_ext
+    assert state[child.seq_id] == child_ext
+
+    eng.run_until_done()
+    assert req.done and child.done
+    assert len(req.output) == len(child.output) == 8
+    # greedy + identical history => identical continuations after the fork
+    assert req.output == child.output
+
+
+def test_fork_never_shares_beyond_tail_staging_pages():
+    """Over-reserved staging pages beyond the tail hold no data and must
+    stay parent-private: sharing them would let both branches scatter into
+    one physical page with no CoW ever privatizing it."""
+    kv = PagedKVCache(KVGeometry(num_pages=16, page_tokens=8, max_seqs=4,
+                                 pages_per_seq=4))
+    s = kv.create_seq()
+    # decode near a page boundary with a whole-chunk reserve: page index 2
+    # is allocated purely as staging (length 14 < 16)
+    kv.append_tokens(s, 13)
+    kv.append_tokens(s, 1, reserve=8)
+    assert len(kv.committed_extents(s)) == 1
+    c = kv.fork(s)
+    parent_pages = kv.page_table()[s]
+    child_pages = kv.page_table()[c]
+    assert parent_pages[2] != 0                  # parent keeps its staging
+    assert child_pages[2] == 0                   # child shares data pages only
+    kv.prepare_append(c, 1)                      # tail CoW still fires
+    assert kv.pages_copied == 1
+    kv.free_seq(s)
+    kv.free_seq(c)
+    assert kv.num_free_pages == 15               # refcounts balanced
+
+
+def test_replay_drops_freed_sequences_on_sid_reuse():
+    """Tombstones: a freed sequence's commits must not be resurrected when
+    its sid (and pages) are reused by a later sequence."""
+    device = PMDevice(size=4 * 1024 * 1024)
+    oplog = OpLog(device, base_block=1, num_blocks=16)
+    kv = PagedKVCache(KVGeometry(num_pages=16, page_tokens=4, max_seqs=1,
+                                 pages_per_seq=4),
+                      mode=Mode.STRICT, oplog=oplog)
+    a = kv.create_seq()
+    kv.append_tokens(a, 12)                      # 3 committed pages
+    kv.free_seq(a)
+    b = kv.create_seq()
+    assert b == a                                # sid reused
+    kv.append_tokens(b, 4)                       # 1 committed page
+    state = replay_kv_commits(oplog.scan())
+    assert state[b] == kv.committed_extents(b)   # only B's single page
+    # rollback tombstone: committed pages beyond the keep point vanish too
+    kv.append_tokens(b, 8)
+    kv.rollback(b, 5)
+    state = replay_kv_commits(oplog.scan())
+    assert set(state[b]) == {0}
+
+
+def test_strict_cow_recommit_wins_on_replay():
+    """Controller-level: after a fork CoW-copies a COMMITTED tail page and
+    the child recommits it, replay resolves the child's extent to the NEW
+    physical page (later entry wins — the recommit case)."""
+    device = PMDevice(size=4 * 1024 * 1024)
+    oplog = OpLog(device, base_block=1, num_blocks=16)
+    kv = PagedKVCache(KVGeometry(num_pages=16, page_tokens=4, max_seqs=4,
+                                 pages_per_seq=4),
+                      mode=Mode.STRICT, oplog=oplog)
+    s = kv.create_seq()
+    kv.append_tokens(s, 6)                      # page 0 full, page 1 partial
+    c = kv.fork(s)
+    cow = kv.prepare_append(c, 1)               # tail shared -> private copy
+    assert cow is not None
+    kv.append_tokens(c, 2)                      # fills the copied tail page
+    state = replay_kv_commits(oplog.scan())
+    assert state[c][1] == cow[1]                # replay lands on the copy
+    assert state[s] == {0: kv.committed_extents(s)[0]}

@@ -199,6 +199,105 @@ def test_decode_equals_full_attention():
                                atol=2e-5, rtol=2e-5)
 
 
+# ---------------------------------------------------------------- chunked serve ops
+
+from repro.kernels import (kv_append_chunk, kv_append_chunk_ref,
+                           paged_attention_chunk, paged_attention_chunk_ref)
+
+
+def chunk_ids(pt, lengths, C, T):
+    pos = np.asarray(lengths)[:, None] + np.arange(C)[None, :]
+    pp = np.minimum(pos // T, np.asarray(pt).shape[1] - 1)
+    pids = np.take_along_axis(np.asarray(pt), pp, axis=1)
+    return (jnp.asarray(pids, jnp.int32), jnp.asarray(pos % T, jnp.int32))
+
+
+@pytest.mark.parametrize("start", [0, 3, 5])
+def test_kv_append_chunk_kernel_matches_oracle(start):
+    """Multi-token scatter parity, including NON-page-aligned starts where
+    the chunk straddles a page boundary (relink's partial-block-copy case:
+    the tail lands in the next staging page)."""
+    P, T, KV, D, B, C = 10, 4, 2, 16, 2, 6
+    pool = jnp.zeros((P, T, KV, D))
+    new = randn(B, C, KV, D)
+    pt = jnp.asarray([[1, 2, 5, 6], [3, 4, 7, 8]], jnp.int32)
+    pids, sids = chunk_ids(pt, [start, start + 1], C, T)
+    a = kv_append_chunk_ref(pool, new, pids, sids)
+    b = kv_append_chunk(pool.copy(), new, pids, sids, impl="interpret")
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32))
+
+
+def test_kv_append_chunk_equals_token_loop():
+    """A C-token chunk scatter == C single-token scatters (same pool)."""
+    P, T, KV, D, B, C = 10, 4, 2, 8, 2, 7
+    pt = jnp.asarray([[1, 2, 5, 6], [3, 4, 7, 8]], jnp.int32)
+    lengths = np.array([2, 5])
+    new = randn(B, C, KV, D)
+    pids, sids = chunk_ids(pt, lengths, C, T)
+    chunk = kv_append_chunk_ref(jnp.zeros((P, T, KV, D)), new, pids, sids)
+    loop = jnp.zeros((P, T, KV, D))
+    for c in range(C):
+        loop = kv_append_ref(loop, new[:, c], pids[:, c], sids[:, c])
+    np.testing.assert_allclose(np.asarray(chunk), np.asarray(loop))
+
+
+PAGED_CHUNK_CASES = [
+    # B, C, H, KV, D, P, T, N, window
+    (2, 4, 4, 2, 32, 8, 8, 4, None),
+    (3, 8, 8, 2, 64, 16, 16, 8, None),
+    (2, 5, 4, 1, 32, 8, 8, 4, None),        # MQA, C not a power of 2
+    (2, 4, 4, 2, 32, 8, 8, 4, 16),          # sliding window
+]
+
+
+@pytest.mark.parametrize("B,C,H,KV,D,P,T,N,window", PAGED_CHUNK_CASES)
+def test_paged_chunk_kernel_matches_oracle(B, C, H, KV, D, P, T, N, window):
+    q = randn(B, C, H, D)
+    pk = randn(P, T, KV, D)
+    pv = randn(P, T, KV, D)
+    pt = jnp.asarray(RNG.integers(0, P, (B, N)), jnp.int32)
+    lens = jnp.asarray(RNG.integers(0, N * T - C, B), jnp.int32)
+    ref = paged_attention_chunk_ref(q, pk, pv, pt, lens, window=window)
+    out = paged_attention_chunk(q, pk, pv, pt, lens, window=window,
+                                impl="interpret")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_paged_chunk_equals_single_token_loop():
+    """Chunk-causal attention over C queries == C sequential single-token
+    decodes (the decode-as-degenerate-C-slice contract)."""
+    B, C, H, KV, D, P, T, N = 2, 5, 4, 2, 32, 16, 8, 4
+    q = randn(B, C, H, D)
+    pk = randn(P, T, KV, D)
+    pv = randn(P, T, KV, D)
+    pt = jnp.asarray(RNG.integers(0, P, (B, N)), jnp.int32)
+    lens0 = jnp.asarray([2, 9], jnp.int32)
+    loop = jnp.stack([paged_attention_ref(q[:, c], pk, pv, pt, lens0 + c + 1)
+                      for c in range(C)], axis=1)
+    chunk = paged_attention_chunk_ref(q, pk, pv, pt, lens0)
+    np.testing.assert_allclose(np.asarray(chunk), np.asarray(loop),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_chunk_ignores_future_and_pad_positions():
+    """Garbage beyond each query's causal horizon — including whole
+    unpublished pages — must not affect any valid row."""
+    B, C, H, KV, D, P, T, N = 1, 4, 4, 2, 32, 8, 8, 4
+    q = randn(B, C, H, D)
+    pk = randn(P, T, KV, D)
+    pv = randn(P, T, KV, D)
+    pt = jnp.asarray([[0, 1, 2, 3]], jnp.int32)
+    lens = jnp.asarray([5], jnp.int32)          # queries sit at 5..8
+    out1 = paged_attention_chunk_ref(q, pk, pv, pt, lens)
+    # positions 9+ (page 1 slots 2.., pages 2-3) are future/pad territory
+    pk2 = pk.at[1, 2:].set(999.0).at[2:].set(999.0)
+    pv2 = pv.at[1, 2:].set(-999.0).at[2:].set(-999.0)
+    out2 = paged_attention_chunk_ref(q, pk2, pv2, pt, lens)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))
+
+
 # ---------------------------------------------------------------- ssd chunk kernel
 
 from repro.kernels import ssd_chunk, ssd_chunk_ref

@@ -35,6 +35,7 @@ def test_serve_variants_agree_single_device():
     mesh = jax.make_mesh((1, 1), ("data", "model"),
                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
     tok = jnp.asarray([[5], [7]], jnp.int32)
+    n_new = jnp.asarray([1, 1], jnp.int32)
     outs = {}
     with jax.set_mesh(mesh):
         for variant in ("gspmd", "shard_map"):
@@ -43,7 +44,7 @@ def test_serve_variants_agree_single_device():
                                          donate=False)
             logits = None
             for _ in range(3):
-                logits, caches = step(params, tok, caches)
+                logits, caches = step(params, tok, caches, n_new)
             outs[variant] = np.asarray(logits, np.float32)
     np.testing.assert_allclose(outs["gspmd"], outs["shard_map"],
                                atol=1e-5, rtol=1e-5)

@@ -83,11 +83,36 @@ def test_serve_step_smoke_decodes(arch):
         step, param_sh, cache_sh = make_serve_step(api, mesh, caches,
                                                    donate=False)
         tok = jnp.asarray([[3], [9]], jnp.int32)
+        n_new = jnp.asarray([1, 1], jnp.int32)
         for i in range(3):
-            logits, caches = step(params, tok, caches)
+            logits, caches = step(params, tok, caches, n_new)
         assert logits.shape == (2, 1, cfg.vocab)
         assert np.isfinite(np.asarray(logits)).all()
         np.testing.assert_array_equal(np.asarray(caches["lengths"]), [3, 3])
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "mamba2-1.3b"])
+def test_serve_step_smoke_chunked(arch):
+    """The SAME builder serves a multi-token chunk: mixed n_new (one slot
+    prefilling a full chunk, one decoding a single token) in one call."""
+    from repro.models.spec import init_params
+    from repro.serve.step import make_serve_step
+
+    cfg = get_config(arch, smoke=True)
+    api = build_model(cfg)
+    params = init_params(api.init_specs(), jax.random.PRNGKey(0))
+    mesh = make_host_mesh()
+    with jax.set_mesh(mesh):
+        caches = api.init_caches(2, 32, page_tokens=8)
+        step, _, _ = make_serve_step(api, mesh, caches, donate=False)
+        tok = jnp.asarray([[3, 4, 5, 6, 7, 8, 9, 10],
+                           [9, 0, 0, 0, 0, 0, 0, 0]], jnp.int32)
+        n_new = jnp.asarray([8, 1], jnp.int32)
+        logits, caches = step(params, tok, caches, n_new)
+        assert logits.shape == (2, 8, cfg.vocab)
+        assert np.isfinite(np.asarray(logits)[0]).all()
+        assert np.isfinite(np.asarray(logits)[1, 0]).all()
+        np.testing.assert_array_equal(np.asarray(caches["lengths"]), [8, 1])
 
 
 # ---------------------------------------------------------------- dryrun

@@ -151,8 +151,9 @@ def test_fork_then_divergence_safe(engine_setup):
     eng = ServingEngine(api, params, max_batch=4, max_seq=64, page_tokens=8,
                         greedy=False, seed=1)
     r = eng.submit(list(range(1, 10)), max_new_tokens=8)
-    for _ in range(12):
+    for _ in range(4):       # chunked prefill (2 steps) + a few decode steps
         eng.step()
+    assert not r.done and r.output
     child = eng.fork(r)
     eng.run_until_done(max_steps=300)
     assert r.done and child.done

@@ -11,18 +11,23 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
-echo "== dryrun smoke: train + prefill + decode cells on the host mesh =="
+echo "== dryrun smoke: train + prefill cells on the host mesh =="
 python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k \
     --smoke --out runs/ci-dryrun
 python -m repro.launch.dryrun --arch qwen2-1.5b --shape prefill_32k \
     --smoke --out runs/ci-dryrun
+echo "== dryrun smoke: multi-arch sweep of the unified serve step =="
+python -m repro.launch.dryrun --sweep --shape decode_32k \
+    --smoke --out runs/ci-dryrun
+echo "== dryrun smoke: chunked-prefill serve cell =="
 python -m repro.launch.dryrun --arch qwen2-1.5b --shape decode_32k \
-    --smoke --out runs/ci-dryrun
-python -m repro.launch.dryrun --arch mamba2-1.3b --shape decode_32k \
-    --smoke --out runs/ci-dryrun
+    --serve-chunk 16 --smoke --out runs/ci-dryrun
 
 echo "== dist microbench (fast): BENCH_dist.json trajectory =="
 python -m benchmarks.dist_micro --fast --out BENCH_dist.json
+
+echo "== serve microbench (fast): BENCH_serve.json trajectory =="
+python -m benchmarks.serve_micro --fast --out BENCH_serve.json
 
 if [[ "${1:-}" == "--bench" ]]; then
     echo "== benchmarks (fast) =="
