@@ -1,0 +1,181 @@
+"""Arrival microbenchmark: prefix-cache admission + open-loop traffic.
+
+Two measurements over the session serving API (DESIGN.md §8):
+
+  1. prefix_admission — a shared-prefix workload (8 requests, 75% common
+     prompt prefix) served with the prefix cache ON vs OFF (OFF = PR-4
+     admission).  With the cache, every request after the first adopts
+     the published prefix pages at admission: fewer prefill steps, fewer
+     allocated pages, identical outputs.
+  2. open_loop — the same workload arriving open-loop (Poisson
+     interarrivals through serve.arrival.OpenLoopDriver), reporting
+     TTFT / TPOT / latency p50/p90/p99 and throughput, cache ON vs OFF.
+
+Artifact: ``BENCH_arrival.json``.
+
+  PYTHONPATH=src python -m benchmarks.arrival_micro [--fast] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.spec import init_params
+from repro.serve import ArrivalSpec, OpenLoopDriver, ServeClient
+from repro.serve.arrival import poisson_schedule
+
+PAGE_TOKENS = 16
+PROMPT_LEN = 64          # 4 pages
+SHARED_TOKENS = 48       # 75% common prefix = 3 full pages
+N_REQUESTS = 8
+
+
+def make_prompts(vocab: int, n: int, seed: int = 0) -> List[List[int]]:
+    rng = np.random.default_rng(seed)
+    shared = list(rng.integers(1, vocab, SHARED_TOKENS))
+    return [shared + list(rng.integers(1, vocab, PROMPT_LEN - SHARED_TOKENS))
+            for _ in range(n)]
+
+
+def _client(api, params, *, prefix_cache: bool, max_batch: int) -> ServeClient:
+    return ServeClient(api, params, max_batch=max_batch, max_seq=128,
+                       page_tokens=PAGE_TOKENS, prefix_cache=prefix_cache)
+
+
+def bench_prefix_admission(api, params, prompts, *, prefix_cache: bool,
+                           decode_tokens: int) -> dict:
+    """Serial admission (each request runs to completion before the next
+    arrives — the cleanest view of what admission itself saves)."""
+    client = _client(api, params, prefix_cache=prefix_cache, max_batch=1)
+    sess = client.open_session()
+    eng = client.engine
+    outputs, prefill_steps = [], 0
+    for prompt in prompts:
+        req = sess.submit(prompt, max_new_tokens=decode_tokens)
+        steps0 = eng.steps
+        while req.in_prefill and not req.done:   # done = truncated early
+            eng.step()
+        prefill_steps += eng.steps - steps0
+        client.run_until_done()
+        outputs.append(req.output)
+    ctrl = eng.controller
+    return {
+        "prefix_cache": prefix_cache,
+        "prefill_steps": prefill_steps,
+        "engine_steps": eng.steps,
+        "pages_allocated": ctrl.pages_allocated,
+        "pages_adopted": ctrl.pages_adopted,
+        "pages_relinked": ctrl.pages_relinked,
+        "tokens_saved": (eng.prefix_cache.tokens_saved
+                         if eng.prefix_cache else 0),
+        "outputs": outputs,
+    }
+
+
+def bench_open_loop(api, params, prompts, *, prefix_cache: bool,
+                    rate_rps: float, decode_tokens: int, seed: int) -> dict:
+    client = _client(api, params, prefix_cache=prefix_cache, max_batch=4)
+    # warm the compiled shapes so jit time doesn't pollute TTFT
+    warm = client.open_session()
+    list(warm.generate([1, 2, 3], max_new_tokens=2))
+    sched = poisson_schedule(len(prompts), rate_rps, seed=seed)
+    workload = [ArrivalSpec(t, p, decode_tokens)
+                for t, p in zip(sched, prompts)]
+    result = OpenLoopDriver(client).run(workload)
+    pct = result.percentiles()
+    return {
+        "prefix_cache": prefix_cache,
+        "rate_rps": rate_rps,
+        "n": len(prompts),
+        "ttft_s": pct["ttft"],
+        "tpot_s": pct["tpot"],
+        "latency_s": pct["latency"],
+        "throughput_tok_s": result.throughput_tok_s,
+        "makespan_s": result.makespan,
+        "engine_steps": result.engine_steps,
+        "stats": result.stats,
+    }
+
+
+def run(fast: bool = False, arch: str = "qwen2-1.5b") -> dict:
+    cfg = get_config(arch, smoke=True)
+    api = build_model(cfg)
+    params = init_params(api.init_specs(), jax.random.PRNGKey(0))
+    decode_tokens = 4 if fast else 16
+    prompts = make_prompts(cfg.vocab, N_REQUESTS)
+
+    on = bench_prefix_admission(api, params, prompts, prefix_cache=True,
+                                decode_tokens=decode_tokens)
+    off = bench_prefix_admission(api, params, prompts, prefix_cache=False,
+                                 decode_tokens=decode_tokens)
+    assert on.pop("outputs") == off.pop("outputs"), \
+        "prefix sharing changed outputs"
+
+    n_open = N_REQUESTS if fast else 24
+    rate = 4.0 if fast else 8.0
+    open_prompts = make_prompts(cfg.vocab, n_open, seed=1)
+    ol_on = bench_open_loop(api, params, open_prompts, prefix_cache=True,
+                            rate_rps=rate, decode_tokens=decode_tokens, seed=2)
+    ol_off = bench_open_loop(api, params, open_prompts, prefix_cache=False,
+                             rate_rps=rate, decode_tokens=decode_tokens, seed=2)
+
+    return {
+        "bench": "arrival_micro",
+        "arch": arch,
+        "page_tokens": PAGE_TOKENS,
+        "prompt_len": PROMPT_LEN,
+        "shared_prefix_tokens": SHARED_TOKENS,
+        "n_requests": N_REQUESTS,
+        "prefix_admission": {
+            "prefix_cache": on,
+            "baseline": off,
+            "prefill_step_reduction":
+                off["prefill_steps"] / max(on["prefill_steps"], 1),
+            "page_reduction":
+                off["pages_allocated"] / max(on["pages_allocated"], 1),
+        },
+        "open_loop": {
+            "prefix_cache": ol_on,
+            "baseline": ol_off,
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--out", default="BENCH_arrival.json")
+    args = ap.parse_args()
+    result = run(fast=args.fast, arch=args.arch)
+    Path(args.out).write_text(json.dumps(result, indent=2))
+    pa = result["prefix_admission"]
+    print(f"[arrival_micro] prefix admission ({result['n_requests']} reqs, "
+          f"{result['shared_prefix_tokens']}/{result['prompt_len']} shared): "
+          f"prefill steps {pa['baseline']['prefill_steps']} -> "
+          f"{pa['prefix_cache']['prefill_steps']} "
+          f"({pa['prefill_step_reduction']:.2f}x), pages "
+          f"{pa['baseline']['pages_allocated']} -> "
+          f"{pa['prefix_cache']['pages_allocated']} "
+          f"({pa['page_reduction']:.2f}x)")
+    ol = result["open_loop"]
+    for tag in ("prefix_cache", "baseline"):
+        r = ol[tag]
+        ttft = r["ttft_s"].get("p50", float("nan"))
+        p99 = r["ttft_s"].get("p99", float("nan"))
+        print(f"[arrival_micro] open-loop {tag}: {r['n']} reqs @ "
+              f"{r['rate_rps']} rps: TTFT p50={ttft*1e3:.0f}ms "
+              f"p99={p99*1e3:.0f}ms, {r['throughput_tok_s']:.0f} tok/s")
+    print(f"[arrival_micro] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -105,6 +105,23 @@ def main() -> None:
           f"speedup={sp['speedup']:.1f}x,"
           f"publishes={serve['publishes']['chunked']}")
 
+    print("\n== serving front-end: prefix admission + open-loop arrivals ==")
+    from . import arrival_micro
+    arr = arrival_micro.run(fast=args.fast)
+    Path("BENCH_arrival.json").write_text(json.dumps(arr, indent=2))
+    pa = arr["prefix_admission"]
+    print(f"prefix_admission,steps={pa['baseline']['prefill_steps']}->"
+          f"{pa['prefix_cache']['prefill_steps']},"
+          f"pages={pa['baseline']['pages_allocated']}->"
+          f"{pa['prefix_cache']['pages_allocated']},"
+          f"step_reduction={pa['prefill_step_reduction']:.2f}x")
+    for tag in ("prefix_cache", "baseline"):
+        r = arr["open_loop"][tag]
+        if r["ttft_s"]:
+            print(f"open_loop,{tag},ttft_p50_ms={r['ttft_s']['p50']*1e3:.0f},"
+                  f"ttft_p99_ms={r['ttft_s']['p99']*1e3:.0f},"
+                  f"tok_s={r['throughput_tok_s']:.0f}")
+
     if Path("runs/dryrun").exists():
         print("\n== Roofline digest (single-pod dry-run artifacts) ==")
         from .roofline import load_records, pick_hillclimb_cells, table

@@ -1,6 +1,10 @@
-"""End-to-end driver: serve a small model with batched requests through the
-paged-KV split store (the paper's kind is storage/serving, so this is the
-required end-to-end example).
+"""End-to-end driver: serve a small model through the session client API
+over the paged-KV split store (the paper's kind is storage/serving, so
+this is the required end-to-end example).
+
+Shows the three front-end features of DESIGN.md §8: sessions with
+different consistency modes coexisting on one engine, prefix-cache
+admission deduplicating a shared prompt prefix, and the zero-copy fork.
 
     PYTHONPATH=src python examples/serve_kv.py [--arch qwen2-1.5b]
 """
@@ -12,9 +16,12 @@ import jax
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
+from repro.core import PMDevice
+from repro.core.modes import Mode
+from repro.core.oplog import OpLog
 from repro.models import build_model
 from repro.models.spec import init_params
-from repro.serve import ServingEngine
+from repro.serve import ServeClient
 
 
 def main() -> None:
@@ -27,31 +34,53 @@ def main() -> None:
     cfg = get_config(args.arch, smoke=True)
     api = build_model(cfg)
     params = init_params(api.init_specs(), jax.random.PRNGKey(0))
-    engine = ServingEngine(api, params, max_batch=args.max_batch,
-                           max_seq=128, page_tokens=16)
+    oplog = OpLog(PMDevice(size=16 * 1024 * 1024), base_block=1,
+                  num_blocks=64)
+    client = ServeClient(api, params, max_batch=args.max_batch,
+                         max_seq=128, page_tokens=16, oplog=oplog)
+
+    # two applications, two consistency modes, ONE engine: the STRICT
+    # session's page publishes are oplogged; the POSIX one rides free
+    posix = client.open_session()
+    strict = client.open_session(mode=Mode.STRICT)
 
     rng = np.random.default_rng(0)
+    shared = list(rng.integers(1, cfg.vocab, 32))   # common prompt prefix
     t0 = time.monotonic()
     for i in range(args.requests):
-        prompt = list(rng.integers(1, cfg.vocab, int(rng.integers(4, 24))))
-        engine.submit(prompt, max_new_tokens=12)
-    done = engine.run_until_done()
+        sess = strict if i % 4 == 0 else posix
+        tail = list(rng.integers(1, cfg.vocab, int(rng.integers(4, 24))))
+        sess.submit(shared + tail, max_new_tokens=12)
+    done = client.run_until_done()
     dt = time.monotonic() - t0
 
     toks = sum(len(r.output) for r in done)
+    st = client.stats()
     print(f"arch={cfg.name}  requests={len(done)}  generated={toks} tokens  "
-          f"wall={dt:.1f}s  engine_steps={engine.steps}")
-    print(f"paged store: relinked={engine.controller.pages_relinked} pages, "
-          f"CoW-copied={engine.controller.pages_copied}, "
-          f"pool-util-peak~{engine.controller.utilization():.1%}")
+          f"wall={dt:.1f}s  engine_steps={st['steps']}")
+    print(f"paged store: relinked={st['pages_relinked']} pages, "
+          f"CoW-copied={st['pages_copied']}, adopted={st['pages_adopted']}, "
+          f"pool-util-peak~{st['utilization']:.1%}")
+    pc = st.get("prefix_cache", {})
+    print(f"prefix cache: hits={pc.get('hits', 0)} "
+          f"tokens_saved={pc.get('tokens_saved', 0)} "
+          f"(the shared 32-token prefix prefills ONCE, then every later "
+          f"request adopts its pages at admission)")
 
-    # zero-copy beam fork demo: one chunked-prefill step (16 tokens = one
-    # page = one publish) + a few decode steps, then fork mid-generation
-    r = engine.submit(list(rng.integers(1, cfg.vocab, 16)), max_new_tokens=10)
+    # streaming generation: Session.generate drives the shared engine and
+    # yields tokens as they are sampled (per-request sampling params)
+    stream = posix.generate(shared[:16], max_new_tokens=8,
+                            temperature=0.7, top_k=40)
+    print(f"streamed (T=0.7, top-k 40): {list(stream)}")
+
+    # zero-copy beam fork demo: prefill + a few decode steps, then fork
+    # mid-generation (shared prefix pages by refcount, CoW tail)
+    engine = client.engine
+    r = posix.submit(list(rng.integers(1, cfg.vocab, 16)), max_new_tokens=10)
     for _ in range(4):
         engine.step()
     child = engine.fork(r)
-    engine.run_until_done()
+    client.run_until_done()
     print(f"forked request {r.rid}->{child.rid}: parent={r.output} "
           f"child={child.output} (shared prefix pages, "
           f"{engine.controller.pages_copied} CoW copies total)")

@@ -68,6 +68,7 @@ class _Seq:
     length: int = 0                      # tokens
     pages: List[int] = field(default_factory=list)  # physical page ids, in order
     committed_pages: int = 0             # pages published (relinkled) so far
+    mode: Mode = Mode.POSIX              # per-sequence consistency mode
 
 
 class PagedKVCache:
@@ -81,6 +82,11 @@ class PagedKVCache:
     def __init__(self, geom: KVGeometry, *, mode: Mode = Mode.POSIX,
                  oplog: Optional[OpLog] = None) -> None:
         self.geom = geom
+        # ``mode`` is the DEFAULT for new sequences; each sequence carries
+        # its own mode (paper §3.2: concurrent U-Split instances in
+        # different modes over one volume, never interfering).  A STRICT
+        # sequence's commits are logged; POSIX/SYNC neighbors on the same
+        # pool pay nothing for them.
         self.mode = mode
         self.oplog = oplog
         # page 0 is the reserved null page: zero table entries mean
@@ -97,6 +103,8 @@ class PagedKVCache:
         # stats (the serving-plane analogues of StoreStats)
         self.pages_relinked = 0     # metadata-only publishes
         self.pages_copied = 0       # CoW copies (partial-page forks)
+        self.pages_allocated = 0    # fresh allocations (prefix hits avoid these)
+        self.pages_adopted = 0      # shared via prefix-cache attach
         self.alloc_failures = 0
 
     # ------------------------------------------------------------- allocation
@@ -107,6 +115,7 @@ class PagedKVCache:
             raise KVPoolFullError("KV page pool exhausted")
         p = self._free.popleft()
         self._refcount[p] = 1
+        self.pages_allocated += 1
         return p
 
     def _release_page(self, p: int) -> None:
@@ -121,12 +130,17 @@ class PagedKVCache:
 
     # ------------------------------------------------------------- sequence ops
 
-    def create_seq(self) -> int:
+    def create_seq(self, mode: Optional[Mode] = None) -> int:
+        """New sequence in consistency mode ``mode`` (default: the
+        controller default).  Sequences in different modes coexist on one
+        pool — mode is consulted per-sequence at every publish, so a
+        STRICT neighbor's oplog traffic never taxes a POSIX one."""
         with self._lock:
             if not self._free_sids:
                 raise KVPoolFullError("no free sequence slots")
             sid = self._free_sids.popleft()
-            self._seqs[sid] = _Seq(sid)
+            self._seqs[sid] = _Seq(sid, mode=self.mode if mode is None
+                                   else mode)
             self._seq_lens[sid] = 0
             return sid
 
@@ -228,13 +242,14 @@ class PagedKVCache:
         return n
 
     def _log_commit(self, seq: _Seq, page_idx: int) -> None:
-        """STRICT mode: one pre-allocated 64 B log entry per published page
-        (1 cacheline store + 1 fence) — crash recovery replays these to
-        reconstruct exactly the committed extent map."""
-        if self.oplog is None or not self.mode.logs_ops:
+        """STRICT sequences: one pre-allocated 64 B log entry per published
+        page (1 cacheline store + 1 fence) — crash recovery replays these to
+        reconstruct exactly the committed extent map.  Per-SEQUENCE mode:
+        a POSIX/SYNC sequence publishes for free."""
+        if self.oplog is None or not seq.mode.logs_ops:
             return
         self.oplog.append(LogEntry(
-            op=OP_KV_COMMIT, mode=int(self.mode),
+            op=OP_KV_COMMIT, mode=int(seq.mode),
             seqno=self.oplog.next_seqno(), inode=seq.sid, offset=page_idx,
             length=self.geom.page_tokens, staging_addr=seq.pages[page_idx],
             aux1=seq.length))
@@ -242,11 +257,15 @@ class PagedKVCache:
     def _log_ctl(self, seq: _Seq, op: int, keep_pages: int) -> None:
         """Unlink/truncate tombstones: replay must not resurrect extents of
         freed (or rolled-back) sequences whose sid/pages were reused."""
-        if self.oplog is None or not self.mode.logs_ops:
+        if self.oplog is None or not seq.mode.logs_ops:
             return
         self.oplog.append(LogEntry(
-            op=op, mode=int(self.mode), seqno=self.oplog.next_seqno(),
+            op=op, mode=int(seq.mode), seqno=self.oplog.next_seqno(),
             inode=seq.sid, offset=keep_pages, length=0, staging_addr=0))
+
+    def seq_mode(self, sid: int) -> Mode:
+        with self._lock:
+            return self._seqs[sid].mode
 
     def committed_extents(self, sid: int) -> Dict[int, int]:
         """The published extent map: logical page index -> physical page."""
@@ -276,7 +295,8 @@ class PagedKVCache:
             n_live = -(-parent.length // self.geom.page_tokens)
             child = _Seq(sid, length=parent.length,
                          pages=list(parent.pages[:n_live]),
-                         committed_pages=parent.committed_pages)
+                         committed_pages=parent.committed_pages,
+                         mode=parent.mode)
             for p in child.pages:
                 self._refcount[p] += 1
             self._seqs[sid] = child
@@ -288,6 +308,64 @@ class PagedKVCache:
             for idx in range(child.committed_pages):
                 self._log_commit(child, idx)
             return sid
+
+    def adopt_prefix(self, sid: int, pages: List[int]) -> int:
+        """Prefix-cache attach: start an EMPTY sequence on a chain of
+        already-published full pages (refcounted hard links — the same
+        sharing ``fork`` uses, minus the CoW tail: adopted pages are all
+        FULL, so the adopter's first append opens a fresh page and can
+        never scribble on shared bytes).  The adopted extents are logged
+        under the ADOPTER's mode, so a STRICT session's crash replay
+        reconstructs its shared prefix too.  Returns tokens adopted."""
+        g = self.geom
+        with self._lock:
+            seq = self._seqs[sid]
+            if seq.length or seq.pages:
+                raise ValueError("adopt_prefix requires a fresh sequence")
+            if len(pages) > g.pages_per_seq:
+                raise KVPoolFullError("prefix longer than a page-table row")
+            for p in pages:
+                if self._refcount[p] <= 0:
+                    raise ValueError(f"page {p} is free; stale prefix chain")
+            for p in pages:
+                self._refcount[p] += 1
+            seq.pages = list(pages)
+            seq.length = len(pages) * g.page_tokens
+            seq.committed_pages = len(pages)
+            self._page_table[sid, :len(pages)] = pages
+            self._seq_lens[sid] = seq.length
+            self.pages_adopted += len(pages)
+            for idx in range(seq.committed_pages):
+                self._log_commit(seq, idx)
+            return seq.length
+
+    # ------------------------------------------------------------- page pins
+
+    def pin_page(self, p: int) -> None:
+        """Take a refcount on a published page so it outlives the sequence
+        that wrote it (the prefix cache's hold — a hard link owned by the
+        cache itself)."""
+        with self._lock:
+            if self._refcount[p] <= 0:
+                raise ValueError(f"cannot pin free page {p}")
+            self._refcount[p] += 1
+
+    def page_refcount(self, p: int) -> int:
+        """Current reference count (live sequences + cache pins) — lets
+        the prefix cache tell an idle pin (count 1: eviction frees the
+        page) from a shared one (eviction frees nothing)."""
+        with self._lock:
+            return int(self._refcount[p])
+
+    def unpin_page(self, p: int) -> None:
+        """Drop a pin; the page returns to the free list once no sequence
+        (and no pin) references it.  Unpinning an already-free page is a
+        caller bookkeeping bug and raises — decrementing past zero would
+        silently free a page a live sequence still maps."""
+        with self._lock:
+            if self._refcount[p] <= 0:
+                raise ValueError(f"cannot unpin free page {p}")
+            self._release_page(p)
 
     def prepare_append(self, sid: int, n_tokens: int = 1) -> Optional[tuple[int, int]]:
         """Called before appending to a sequence whose tail page may be

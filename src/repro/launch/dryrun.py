@@ -309,6 +309,54 @@ def run_cells(cells, *, multi_pod: bool, serve_impl: str, out_dir: Path,
     return results
 
 
+def smoke_serve_sessions(arch: str, out_dir: Path) -> dict:
+    """End-to-end session-API smoke (CI gate): two sessions in different
+    consistency modes on ONE engine, a shared-prefix workload through
+    prefix-cache admission, and a tiny open-loop arrival run.  Gates that
+    the serving FRONT-END works, where the cells above gate that the
+    serving PROGRAM compiles."""
+    import numpy as np
+
+    from ..core import PMDevice
+    from ..core.modes import Mode
+    from ..core.oplog import OpLog
+    from ..models.spec import init_params
+    from ..serve import ArrivalSpec, OpenLoopDriver, ServeClient
+
+    cfg = get_config(arch, smoke=True)
+    api = build_model(cfg)
+    params = init_params(api.init_specs(), jax.random.PRNGKey(0))
+    oplog = OpLog(PMDevice(size=8 * 1024 * 1024), base_block=1, num_blocks=32)
+    client = ServeClient(api, params, max_batch=2, max_seq=64,
+                         page_tokens=8, oplog=oplog)
+    posix = client.open_session()
+    strict = client.open_session(mode=Mode.STRICT)
+    rng = np.random.default_rng(0)
+    shared = list(rng.integers(1, cfg.vocab, 16))
+    sched = [0.0, 0.02, 0.04, 0.06]
+    workload = [
+        ArrivalSpec(t, shared + list(rng.integers(1, cfg.vocab, 4)), 3,
+                    session=strict if i % 2 else posix)
+        for i, t in enumerate(sched)]
+    result = OpenLoopDriver(client, session=posix).run(workload)
+    ok = (len(client.engine.finished) == len(workload)
+          and all(r.t_done is not None for r in result.records))
+    record = {"cell": "serve_sessions", "arch": arch,
+              "status": "ok" if ok else "failed",
+              "requests": len(result.records),
+              "percentiles": result.percentiles(),
+              "stats": {k: v for k, v in result.stats.items()
+                        if k != "utilization"}}
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / "serve_sessions.json").write_text(
+        json.dumps(record, indent=2, default=str))
+    pc = result.stats.get("prefix_cache", {})
+    print(f"[dryrun] serve_sessions: {record['status']} "
+          f"({record['requests']} reqs, prefix hits={pc.get('hits', 0)}, "
+          f"adopted={result.stats.get('pages_adopted', 0)} pages)")
+    return record
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS)
@@ -332,8 +380,18 @@ def main() -> None:
                     help="int8 pod-axis gradient compression (opt-in)")
     ap.add_argument("--smoke", action="store_true",
                     help="smoke configs on the real host mesh (CI gate)")
+    ap.add_argument("--serve-sessions", action="store_true",
+                    help="end-to-end session-API smoke (mixed-mode "
+                         "sessions + prefix cache + open-loop arrivals)")
     ap.add_argument("--out", default="runs/dryrun")
     args = ap.parse_args()
+
+    if args.serve_sessions:
+        record = smoke_serve_sessions(args.arch or "qwen2-1.5b",
+                                      Path(args.out))
+        if record["status"] != "ok":
+            raise SystemExit(1)
+        return
 
     if args.all:
         cells = [(a, s.name) for a in ARCH_IDS

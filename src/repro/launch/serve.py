@@ -1,6 +1,13 @@
-"""Serving driver: continuous batching over the paged KV store.
+"""Serving driver: the session client API over continuous batching.
 
   python -m repro.launch.serve --arch qwen2-1.5b --requests 12
+  python -m repro.launch.serve --rate 8 --shared-prefix 0.5   # open loop
+
+Each run opens one session per consistency mode named in ``--modes``
+(sessions coexist on ONE engine; only STRICT sessions pay oplog
+publishes) and spreads the requests round-robin across them.  With
+``--rate`` the requests arrive open-loop (Poisson) through
+serve.arrival.OpenLoopDriver and the summary adds TTFT/TPOT percentiles.
 """
 
 from __future__ import annotations
@@ -8,13 +15,30 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
+import jax
+
 from ..configs import ARCH_IDS, get_config
+from ..core import PMDevice
+from ..core.modes import Mode
+from ..core.oplog import OpLog
 from ..models import build_model
 from ..models.spec import init_params
-from ..serve import ServingEngine
+from ..serve import ArrivalSpec, OpenLoopDriver, ServeClient
+from ..serve.arrival import poisson_schedule
+
+
+def make_prompts(rng, vocab: int, n: int, shared_frac: float) -> list:
+    """Random prompts; ``shared_frac`` of each prompt (page-rounded by the
+    engine) is a common prefix — the prefix-cache's workload."""
+    shared = list(rng.integers(1, vocab, 32))
+    out = []
+    for _ in range(n):
+        plen = int(rng.integers(8, 32))
+        keep = int(len(shared) * shared_frac)
+        out.append(shared[:keep] + list(rng.integers(1, vocab, plen)))
+    return out
 
 
 def main() -> None:
@@ -28,31 +52,85 @@ def main() -> None:
                     help="prefill chunk size (0 = page_tokens: one page "
                          "publish per chunk; 1 = token-at-a-time baseline)")
     ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--modes", default="posix",
+                    help="comma list of session modes (posix,sync,strict); "
+                         "requests round-robin across the sessions")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--shared-prefix", type=float, default=0.0,
+                    help="fraction of each prompt drawn from a common "
+                         "prefix (exercises prefix-cache admission)")
+    ap.add_argument("--no-prefix-cache", action="store_true")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="open-loop Poisson arrival rate in req/s "
+                         "(0 = submit everything up front)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
     api = build_model(cfg)
     params = init_params(api.init_specs(), jax.random.PRNGKey(args.seed))
-    engine = ServingEngine(api, params, max_batch=args.max_batch,
-                           max_seq=args.max_seq, page_tokens=args.page_tokens,
-                           chunk_tokens=args.chunk_tokens or None)
+    modes = [Mode[m.strip().upper()] for m in args.modes.split(",")]
+    oplog = None
+    if any(m.logs_ops for m in modes):
+        oplog = OpLog(PMDevice(size=16 * 1024 * 1024), base_block=1,
+                      num_blocks=64)
+    client = ServeClient(api, params, max_batch=args.max_batch,
+                         max_seq=args.max_seq, page_tokens=args.page_tokens,
+                         chunk_tokens=args.chunk_tokens or None,
+                         oplog=oplog, prefix_cache=not args.no_prefix_cache)
+    sessions = [client.open_session(mode=m, temperature=args.temperature,
+                                    top_k=args.top_k) for m in modes]
     rng = np.random.default_rng(args.seed)
+    prompts = make_prompts(rng, cfg.vocab, args.requests, args.shared_prefix)
+
     t0 = time.monotonic()
-    for _ in range(args.requests):
-        plen = int(rng.integers(3, 20))
-        engine.submit(list(rng.integers(1, cfg.vocab, plen)),
-                      max_new_tokens=args.max_new_tokens)
-    done = engine.run_until_done()
+    if args.rate > 0:
+        sched = poisson_schedule(len(prompts), args.rate, seed=args.seed)
+        # ONE open-loop driver; requests round-robin across the mode
+        # sessions via per-spec session routing (mixed-mode traffic)
+        workload = [ArrivalSpec(t, p, args.max_new_tokens,
+                                session=sessions[j % len(sessions)])
+                    for j, (t, p) in enumerate(zip(sched, prompts))]
+        result = OpenLoopDriver(client, session=sessions[0]).run(workload)
+        done = client.engine.finished
+    else:
+        for i, prompt in enumerate(prompts):
+            sessions[i % len(sessions)].submit(
+                prompt, max_new_tokens=args.max_new_tokens)
+        done = client.run_until_done()
+        result = None
     dt = time.monotonic() - t0
+
+    engine = client.engine
     total_tokens = sum(len(r.output) for r in done)
     print(f"[serve] {len(done)} requests, {total_tokens} tokens in {dt:.2f}s "
-          f"({engine.steps} engine steps, chunk={engine.chunk})")
-    print(f"[serve] pages relinked={engine.controller.pages_relinked} "
-          f"CoW-copied={engine.controller.pages_copied} "
-          f"pool utilization={engine.controller.utilization():.2%}")
+          f"({engine.steps} engine steps, chunk={engine.chunk}, "
+          f"sessions={','.join(m.name for m in modes)})")
+    st = client.stats()
+    print(f"[serve] pages relinked={st['pages_relinked']} "
+          f"CoW-copied={st['pages_copied']} adopted={st['pages_adopted']} "
+          f"pool utilization={st['utilization']:.2%}")
+    if "prefix_cache" in st:
+        pc = st["prefix_cache"]
+        print(f"[serve] prefix cache: hits={pc['hits']} "
+              f"misses={pc['misses']} tokens_saved={pc['tokens_saved']}")
+    if result is not None:
+        pct = result.percentiles()
+        ttft, lat = pct["ttft"], pct["latency"]
+        if ttft:
+            tail = (f" latency p99={lat['p99']*1e3:.0f}ms" if lat else
+                    " (no request completed: latency n/a)")
+            print(f"[serve] open-loop @{args.rate}rps: "
+                  f"TTFT p50={ttft['p50']*1e3:.0f}ms "
+                  f"p99={ttft['p99']*1e3:.0f}ms{tail}")
+    stalled = [r for r in engine.waiting + list(engine.active.values())
+               if r.stalled]
+    if stalled:
+        print(f"[serve] WARNING: {len(stalled)} requests stalled (timeout)")
     for r in done[:3]:
-        print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.output}")
+        print(f"  req {r.rid} [{r.mode.name}]: prompt[{len(r.prompt)}] "
+              f"prefix_hit={r.prefix_tokens} -> {r.output}")
 
 
 if __name__ == "__main__":

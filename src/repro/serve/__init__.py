@@ -1,2 +1,12 @@
-"""Continuous-batching serving engine over the paged KV store."""
-from .engine import Request, ServingEngine
+"""Serving stack: session client API over the continuous-batching engine.
+
+``ServeClient`` / ``Session`` (serve.api) is the front door — per-session
+consistency modes and sampling over ONE engine; ``ServingEngine`` remains
+the raw control plane underneath; ``PrefixCache`` dedups shared prompt
+prefixes at admission; ``arrival`` drives open-loop traffic.
+"""
+from .api import ServeClient, Session
+from .arrival import (ArrivalResult, ArrivalSpec, OpenLoopDriver,
+                      poisson_schedule, trace_schedule)
+from .engine import Request, SamplingParams, ServingEngine
+from .prefix_cache import PrefixCache

@@ -1,0 +1,176 @@
+"""Session-oriented serving client — the libfs analogue (DESIGN.md §8).
+
+SplitFS gives each application its own user-space library instance with
+its own consistency mode over one shared kernel volume.  The serving
+analogue: ``ServeClient`` owns ONE engine (one pool, one compiled step),
+and ``open_session(mode=...)`` hands out lightweight ``Session`` handles —
+each with its own consistency mode and default sampling — that coexist on
+that engine.  A STRICT session's page publishes are oplogged (and exactly
+its extents are reconstructed by crash replay); a POSIX session batched
+right next to it pays nothing.
+
+    client = ServeClient(api, params, max_batch=4, page_tokens=16)
+    strict = client.open_session(mode=Mode.STRICT)
+    posix  = client.open_session()                       # default POSIX
+    for tok in strict.generate(prompt, max_new_tokens=32):
+        ...                                              # streams tokens
+
+``Session.generate`` is a generator that DRIVES the engine while it
+yields: every consumer of any session's generator advances the whole
+batch, so concurrently-iterated sessions interleave naturally (continuous
+batching).  For open-loop traffic, submit via ``Session.submit`` and pump
+``ServeClient.step`` / ``run_until_done`` yourself (serve/arrival.py).
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Dict, Iterator, List, Optional
+
+from ..core.modes import Mode
+from ..core.oplog import OpLog
+from ..models.registry import ModelAPI
+from .engine import Request, SamplingParams, ServingEngine
+
+
+class Session:
+    """One application's handle onto the shared engine: a consistency mode
+    plus default sampling parameters, both overridable per call."""
+
+    def __init__(self, client: "ServeClient", session_id: int, mode: Mode,
+                 sampling: SamplingParams) -> None:
+        self.client = client
+        self.session_id = session_id
+        self.mode = mode
+        self.sampling = sampling
+        self.requests: List[Request] = []
+        self.closed = False
+
+    # ------------------------------------------------------------------ ops
+
+    def submit(self, prompt: List[int], max_new_tokens: int = 16, *,
+               temperature: Optional[float] = None,
+               top_k: Optional[int] = None) -> Request:
+        """Queue a request under this session's mode; the engine must be
+        pumped (``client.step`` / ``run_until_done`` or any session's
+        generator) for it to make progress."""
+        if self.closed:
+            raise RuntimeError("session is closed")
+        req = self.client.engine.submit(
+            list(prompt), max_new_tokens, mode=self.mode,
+            sampling=self._sampling(temperature, top_k))
+        self.requests.append(req)
+        return req
+
+    def generate(self, prompt: List[int], max_new_tokens: int = 16, *,
+                 temperature: Optional[float] = None,
+                 top_k: Optional[int] = None,
+                 max_steps: int = 100000) -> Iterator[int]:
+        """Stream generated token ids.  Driving this generator steps the
+        SHARED engine, so other sessions' requests advance too.  On a
+        ``max_steps`` timeout the request is flagged ``stalled`` and the
+        stream ends (callers distinguish timeout from completion via the
+        request, available as ``session.requests[-1]``)."""
+        req = self.submit(prompt, max_new_tokens,
+                          temperature=temperature, top_k=top_k)
+        emitted = 0
+        steps0 = self.client.engine.steps
+        timed_out = False
+        try:
+            while True:
+                while emitted < len(req.output):
+                    yield req.output[emitted]
+                    emitted += 1
+                if req.done:
+                    return
+                if self.client.engine.steps - steps0 >= max_steps:
+                    req.stalled = True
+                    timed_out = True
+                    return
+                self.client.engine.step()
+        finally:
+            # an abandoned stream (break / .close()) must not keep its
+            # request decoding and its slot+pages held; OUR OWN stalled
+            # return is different — that request stays resumable by
+            # design (req.stalled alone isn't proof of that: a concurrent
+            # run_until_done timeout sets it on abandoned requests too)
+            if not req.done and not timed_out:
+                self.client.engine.cancel(req)
+
+    def close(self) -> None:
+        """Sessions are handles, not resources: closing only refuses new
+        submissions (in-flight requests drain normally)."""
+        self.closed = True
+
+    # ------------------------------------------------------------------ misc
+
+    def _sampling(self, temperature: Optional[float],
+                  top_k: Optional[int]) -> SamplingParams:
+        if temperature is None and top_k is None:
+            return self.sampling
+        return SamplingParams(
+            temperature=self.sampling.temperature if temperature is None
+            else temperature,
+            top_k=self.sampling.top_k if top_k is None else top_k)
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class ServeClient:
+    """Front-end over one ``ServingEngine``: session management, prefix
+    cache (ON by default — shared prompt prefixes adopt published page
+    chains and skip their prefill), and the engine pump."""
+
+    def __init__(self, api: ModelAPI, params, *, max_batch: int = 8,
+                 max_seq: int = 512, page_tokens: int = 16,
+                 chunk_tokens: Optional[int] = None, seed: int = 0,
+                 default_mode: Mode = Mode.POSIX,
+                 oplog: Optional[OpLog] = None,
+                 prefix_cache: bool = True) -> None:
+        self.engine = ServingEngine(
+            api, params, max_batch=max_batch, max_seq=max_seq,
+            page_tokens=page_tokens, chunk_tokens=chunk_tokens, seed=seed,
+            mode=default_mode, oplog=oplog, prefix_cache=prefix_cache)
+        self._sids = itertools.count()
+        self.sessions: Dict[int, Session] = {}
+
+    def open_session(self, mode: Optional[Mode] = None, *,
+                     temperature: float = 0.0, top_k: int = 0) -> Session:
+        """A new session in consistency mode ``mode`` (default: the
+        client's default mode).  Sessions with different modes coexist on
+        the one engine; only STRICT sessions pay oplog publishes."""
+        sid = next(self._sids)
+        sess = Session(self, sid,
+                       self.engine.controller.mode if mode is None else mode,
+                       SamplingParams(temperature=temperature, top_k=top_k))
+        self.sessions[sid] = sess
+        return sess
+
+    # ------------------------------------------------------------------ pump
+
+    def step(self) -> None:
+        self.engine.step()
+
+    def run_until_done(self, max_steps: int = 10000) -> List[Request]:
+        return self.engine.run_until_done(max_steps)
+
+    # ------------------------------------------------------------------ stats
+
+    def stats(self) -> Dict[str, object]:
+        ctrl = self.engine.controller
+        out: Dict[str, object] = {
+            "steps": self.engine.steps,
+            "pages_relinked": ctrl.pages_relinked,
+            "pages_copied": ctrl.pages_copied,
+            "pages_allocated": ctrl.pages_allocated,
+            "pages_adopted": ctrl.pages_adopted,
+            "utilization": ctrl.utilization(),
+            "sessions": len(self.sessions),
+        }
+        if self.engine.prefix_cache is not None:
+            out["prefix_cache"] = self.engine.prefix_cache.stats()
+        return out

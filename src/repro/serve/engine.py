@@ -10,10 +10,18 @@ The split architecture at serving time (DESIGN.md §3.4):
     a full prefill chunk fills exactly one KV page and costs exactly ONE
     metadata publish — the chunk/page invariant (DESIGN.md §3.4/§8).
   * control plane: this engine + core.kvcache.PagedKVCache do *metadata
-    only* — slot admission, per-slot chunk cursors, bulk page allocation
-    (pre-allocated free list), publish-on-page-fill via
+    only* — slot admission (with prefix-cache attach: a prompt whose
+    prefix matches a published page chain adopts those pages and skips
+    their prefill chunks entirely), per-slot chunk cursors, bulk page
+    allocation (pre-allocated free list), publish-on-page-fill via
     ``PagedKVCache.commit`` (relink; one 64 B ``OP_KV_COMMIT`` oplog entry
-    per page in STRICT mode), refcounted prefix sharing, CoW forks.
+    per page for STRICT sequences), refcounted prefix sharing, CoW forks.
+
+Consistency modes are PER-REQUEST (per-sequence in the controller): STRICT
+and POSIX requests batch together on one engine, and only the STRICT ones
+pay oplog publishes — the libfs-per-application split of the paper.
+Sampling parameters are also per-request (``SamplingParams``); the host
+sampler stays in one place (``_sample``).
 
 The controller is AUTHORITATIVE for the device page table: the engine
 mirrors controller rows into the device array whenever metadata changes.
@@ -38,6 +46,28 @@ from ..core.kvcache import PagedKVCache
 from ..core.modes import Mode
 from ..core.oplog import OpLog
 from ..models.registry import ModelAPI
+from .prefix_cache import PrefixCache
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling: temperature <= 0 means greedy (argmax);
+    top_k == 0 means the full vocabulary.  The host sampler itself stays
+    in one place (``ServingEngine._sample``)."""
+    temperature: float = 0.0
+    top_k: int = 0
+
+    def __post_init__(self) -> None:
+        if self.top_k < 0:
+            raise ValueError("top_k must be >= 0")
+
+GREEDY = SamplingParams()
+
+# cache sub-dict keys that hold recurrent/SSM state (vs paged KV pools).
+# ONE source of truth: the slot-state walks, the recurrent-arch guard for
+# the prefix cache, and the fork page copy all consult this set — adding a
+# new state kind in the models must extend it here or the guard misses.
+RECURRENT_STATE_KEYS = frozenset({"conv", "h", "ssd"})
 
 
 @dataclass
@@ -45,12 +75,17 @@ class Request:
     rid: int
     prompt: List[int]
     max_new_tokens: int = 16
+    mode: Mode = Mode.POSIX              # per-request consistency mode
+    sampling: SamplingParams = GREEDY
     output: List[int] = field(default_factory=list)
     slot: Optional[int] = None
     seq_id: Optional[int] = None
     prompt_pos: int = 0                  # per-slot chunk cursor
+    prefix_tokens: int = 0               # prompt tokens adopted from the cache
     done: bool = False
     truncated: bool = False              # finished early (pool backpressure)
+    stalled: bool = False                # run_until_done hit max_steps first
+    cancelled: bool = False              # aborted by the caller
 
     @property
     def in_prefill(self) -> bool:
@@ -62,7 +97,8 @@ class ServingEngine:
                  max_seq: int = 512, page_tokens: int = 16,
                  chunk_tokens: Optional[int] = None, greedy: bool = True,
                  seed: int = 0, mode: Mode = Mode.POSIX,
-                 oplog: Optional[OpLog] = None) -> None:
+                 oplog: Optional[OpLog] = None,
+                 prefix_cache: "bool | PrefixCache | None" = None) -> None:
         self.api = api
         self.params = params
         self.max_batch = max_batch
@@ -71,7 +107,9 @@ class ServingEngine:
         # C == page_tokens by default: one full chunk == one page == one
         # publish; chunk_tokens=1 recovers the token-at-a-time baseline
         self.chunk = int(chunk_tokens) if chunk_tokens else page_tokens
-        self.greedy = greedy
+        # engine-wide DEFAULT sampling; requests override per-call
+        self.default_sampling = GREEDY if greedy \
+            else SamplingParams(temperature=1.0)
         self.rng = np.random.default_rng(seed)
         self.caches = api.init_caches(max_batch, max_seq, page_tokens)
         geom = api.kv_geometry(max_batch, max_seq, page_tokens)
@@ -79,6 +117,16 @@ class ServingEngine:
             assert tuple(self.caches["page_table"].shape) == \
                 (max_batch, geom.pages_per_seq), "geometry/pool mismatch"
         self.controller = PagedKVCache(geom, mode=mode, oplog=oplog)
+        # prefix cache: True builds one over this controller; an instance
+        # is adopted as-is; None/False disables.  Models carrying recurrent
+        # state (conv/h/ssd leaves) cannot reuse KV pages without also
+        # replaying the recurrent scan, so the cache is refused for them —
+        # attaching would silently skip state updates for the shared span.
+        if prefix_cache and self._has_recurrent_state():
+            prefix_cache = None
+        self.prefix_cache: Optional[PrefixCache] = (
+            PrefixCache(self.controller) if prefix_cache is True
+            else prefix_cache or None)
         # hard per-slot token cap: the fixed-shape step addresses positions
         # up to lengths + C - 1, which must stay inside the page-table row
         self._cap = min(max_seq - 1, geom.max_tokens_per_seq - self.chunk)
@@ -91,7 +139,9 @@ class ServingEngine:
 
     # ------------------------------------------------------------------ API
 
-    def submit(self, prompt: List[int], max_new_tokens: int = 16) -> Request:
+    def submit(self, prompt: List[int], max_new_tokens: int = 16, *,
+               mode: Optional[Mode] = None,
+               sampling: Optional[SamplingParams] = None) -> Request:
         if not prompt:
             raise ValueError("empty prompt")
         # statically infeasible prompts are rejected here; prompts that fit
@@ -111,13 +161,25 @@ class ServingEngine:
             raise ValueError(
                 f"prompt of {len(prompt)} tokens exceeds the per-slot "
                 f"capacity of {limit} (pool geometry / window bound)")
-        req = Request(next(self._rid), list(prompt), max_new_tokens)
+        req = Request(next(self._rid), list(prompt), max_new_tokens,
+                      mode=self.controller.mode if mode is None else mode,
+                      sampling=self.default_sampling if sampling is None
+                      else sampling)
         self.waiting.append(req)
         return req
 
     def run_until_done(self, max_steps: int = 10000) -> List[Request]:
-        while (self.waiting or self.active) and self.steps < max_steps:
+        for req in list(self.active.values()) + self.waiting:
+            req.stalled = False          # a fresh drive gets a fresh verdict
+        steps0 = self.steps              # budget is per-call, not lifetime
+        while (self.waiting or self.active) and \
+                self.steps - steps0 < max_steps:
             self.step()
+        # hitting max_steps with work outstanding is a TIMEOUT, not
+        # completion: flag the survivors so callers can tell the two apart
+        # (they stay queued/active and resume if stepped again)
+        for req in list(self.active.values()) + self.waiting:
+            req.stalled = True
         return self.finished
 
     # ------------------------------------------------------------------ engine step
@@ -128,8 +190,20 @@ class ServingEngine:
             slot = free_slots.pop(0)
             req = self.waiting.pop(0)
             req.slot = slot
-            req.seq_id = self.controller.create_seq()
-            self._set_device_length(slot, 0)
+            req.seq_id = self.controller.create_seq(mode=req.mode)
+            # prefix-cache attach: adopt the longest published page chain
+            # matching the prompt (refcounted hard links) — those tokens'
+            # prefill chunks are skipped outright, and the device length
+            # starts past them so the first real chunk lands after the
+            # shared span
+            start = 0
+            if self.prefix_cache is not None and req.in_prefill:
+                pages, n_tok = self.prefix_cache.match(req.prompt,
+                                                       align=self.chunk)
+                if n_tok:
+                    self.controller.adopt_prefix(req.seq_id, pages)
+                    req.prompt_pos = req.prefix_tokens = start = n_tok
+            self._set_device_length(slot, start)
             self._zero_slot_state(slot)
             self.active[slot] = req
 
@@ -157,11 +231,20 @@ class ServingEngine:
                 feed = [req.output[-1]]
             # backpressure: only the VALID tokens need pages (pad positions
             # fall back to the null page when the over-reserve can't be
-            # had); a chunk that cannot even stage its valid tokens
-            # finishes the request — flagged truncated — instead of
-            # stalling the whole batch
-            if self.controller.pages_needed(req.seq_id, total + take) > \
-                    self.controller.num_free_pages:
+            # had).  Cached-but-idle prefix pins are evicted first — live
+            # sequences always outrank the cache — and only a chunk that
+            # STILL cannot stage its valid tokens finishes the request,
+            # flagged truncated, instead of stalling the whole batch
+            need = self.controller.pages_needed(req.seq_id, total + take)
+            if self.prefix_cache is not None:
+                # cached-but-idle prefixes yield to live sequences:
+                # release() evicts only pins whose page actually returns
+                # to the pool (idle — not shared with a live sequence),
+                # so it never drains hot shared chains for zero pages
+                free = self.controller.num_free_pages
+                if need > free:
+                    self.prefix_cache.release(need - free)
+            if need > self.controller.num_free_pages:
                 req.truncated = True
                 self._finish(slot, req)
                 continue
@@ -187,9 +270,17 @@ class ServingEngine:
                 req.prompt_pos += take
                 if req.in_prefill:
                     continue              # more prompt chunks to go
+                if self.prefix_cache is not None:
+                    # prompt fully ingested: publish its full pages into
+                    # the trie so later prompts sharing the prefix adopt
+                    # them (idempotent for the pages this request itself
+                    # adopted at admission)
+                    self.prefix_cache.insert(
+                        req.prompt,
+                        self.controller.committed_extents(req.seq_id))
             # the chunk's last valid position predicts the next token: the
             # final prefill chunk yields the first generated token for free
-            tok = self._sample(logits[slot, take - 1])
+            tok = self._sample(logits[slot, take - 1], req.sampling)
             req.output.append(tok)
             total = self.controller.seq_length(req.seq_id)
             if len(req.output) >= req.max_new_tokens:
@@ -198,16 +289,38 @@ class ServingEngine:
                 req.truncated = True        # capacity-bound, not completed
                 self._finish(slot, req)
 
+    def cancel(self, req: Request) -> None:
+        """Abort a queued or in-flight request, releasing its batch slot
+        and pages immediately (an abandoned stream must not keep decoding
+        on everyone else's engine pumps).  Finished requests are left
+        untouched."""
+        if req.done:
+            return
+        req.cancelled = True
+        if req in self.waiting:
+            self.waiting.remove(req)
+            req.done = True
+            self.finished.append(req)
+        elif req.slot is not None and self.active.get(req.slot) is req:
+            self._finish(req.slot, req)
+
     def _finish(self, slot: int, req: Request) -> None:
         req.done = True
+        req.stalled = False      # it completed after all: not a timeout
         self.finished.append(req)
         self.controller.free_seq(req.seq_id)
         del self.active[slot]
 
-    def _sample(self, row: np.ndarray) -> int:
-        if self.greedy:
+    def _sample(self, row: np.ndarray, sp: SamplingParams = GREEDY) -> int:
+        """The ONE host sampler: per-request temperature / top-k feed it
+        parameters, but every request's logits go through this path."""
+        if sp.temperature <= 0.0 or sp.top_k == 1:
             return int(row.argmax())
-        z = (row - row.max()).astype(np.float64)
+        z = row.astype(np.float64) / sp.temperature
+        if sp.top_k and sp.top_k < len(row):
+            kth = np.partition(z, -sp.top_k)[-sp.top_k]
+            z = np.where(z >= kth, z, -np.inf)
+        z -= z.max()
         p = np.exp(z)
         p /= p.sum()
         return int(self.rng.choice(len(row), p=p))
@@ -237,7 +350,7 @@ class ServingEngine:
         carry a leading layer dim)."""
         def rewrite(node, batch_dim):
             if isinstance(node, dict):
-                if set(node) <= {"conv", "h", "ssd"}:
+                if set(node) <= RECURRENT_STATE_KEYS:
                     return {k: fn(v, batch_dim) for k, v in node.items()}
                 return {k: rewrite(v, batch_dim) for k, v in node.items()}
             return node
@@ -245,6 +358,26 @@ class ServingEngine:
         for key, batch_dim in (("group", 1), ("tail", 0)):
             if key in self.caches:
                 self.caches[key] = rewrite(self.caches[key], batch_dim)
+
+    def _has_recurrent_state(self) -> bool:
+        """True when any cache leaf-group is recurrent/SSM state (conv/h/
+        ssd): such models fold EVERY token into carried state, so adopting
+        KV pages without re-running the span would corrupt generation."""
+        found = False
+
+        def visit(node):
+            nonlocal found
+            if isinstance(node, dict):
+                if node and set(node) <= RECURRENT_STATE_KEYS:
+                    found = True
+                else:
+                    for v in node.values():
+                        visit(v)
+
+        for key in ("group", "tail"):
+            if key in self.caches:
+                visit(self.caches[key])
+        return found
 
     def _zero_slot_state(self, slot: int) -> None:
         """A freshly admitted slot must not inherit the previous occupant's
@@ -273,9 +406,11 @@ class ServingEngine:
         if not free_slots:
             raise RuntimeError("no free slot for fork")
         slot = free_slots[0]
-        child = Request(next(self._rid), list(req.prompt), req.max_new_tokens)
+        child = Request(next(self._rid), list(req.prompt), req.max_new_tokens,
+                        mode=req.mode, sampling=req.sampling)
         child.output = list(req.output)
         child.prompt_pos = req.prompt_pos
+        child.prefix_tokens = req.prefix_tokens
         child.slot = slot
         child.seq_id = self.controller.fork(req.seq_id)
         cow = self.controller.prepare_append(child.seq_id, 1)
@@ -300,7 +435,7 @@ class ServingEngine:
 
         def walk(node):
             if isinstance(node, dict):
-                if set(node) <= {"conv", "h", "ssd"}:
+                if set(node) <= RECURRENT_STATE_KEYS:
                     return node     # recurrent state carries no pages
                 return {k: walk(v) for k, v in node.items()}
             if isinstance(node, tuple):

@@ -1,0 +1,229 @@
+"""Prefix cache: a trie of published KV page chains (DESIGN.md §8).
+
+The SplitFS mechanism, one level up: where the paged controller maps a
+SEQUENCE to its extents, the prefix cache maps PROMPT CONTENT to extents —
+a content-addressed directory over the same pool.  Each trie edge is one
+FULL page's worth of token ids; each node holds the physical page that a
+prior sequence published for exactly that token chunk.  Admission walks
+the trie and attaches the new sequence to the longest matching chain via
+``PagedKVCache.adopt_prefix`` — the same refcounted full-page sharing
+(hard links) that ``fork`` uses.  A shared prefix therefore costs ZERO
+prefill compute and ZERO fresh pages; only the divergent tail is staged
+and computed.
+
+Safety invariants (tested in tests/test_serve_api.py):
+  * only FULL, PUBLISHED pages enter the trie — an adopter's first append
+    opens a fresh page, so shared bytes are never rewritten (no CoW needed
+    at attach; fork's CoW tail still covers post-adoption forks);
+  * every cached page carries a cache-owned refcount PIN, so it survives
+    the writing sequence's ``free_seq`` without leaking: eviction unpins,
+    and the pool reclaims the page when the last sequence drops it;
+  * eviction is leaf-first in LRU order — an interior page is never
+    unpinned while a longer cached chain still runs through it (a matched
+    chain must be adoptable atomically).
+
+The cache is metadata-only and mode-agnostic: pages published by a STRICT
+session may be adopted by a POSIX one and vice versa; adoption logs under
+the ADOPTER's own mode (per-seq modes, core.kvcache).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core.kvcache import PagedKVCache
+
+
+@dataclass
+class _Node:
+    page: int                            # physical page for this chunk
+    children: Dict[Tuple[int, ...], "_Node"] = field(default_factory=dict)
+    last_used: int = 0                   # LRU clock tick
+
+
+class PrefixCache:
+    """Content-addressed index of published page chains over one pool.
+
+    ``capacity_pages`` bounds how many pages the cache may pin at once
+    (default: half the pool minus the null page); ``release`` evicts
+    leaf-first LRU pins, and the engine calls it under pool pressure so
+    cached-but-idle prefixes never starve live sequences.
+    """
+
+    def __init__(self, controller: PagedKVCache,
+                 capacity_pages: Optional[int] = None) -> None:
+        self.controller = controller
+        self.page_tokens = controller.geom.page_tokens
+        if capacity_pages is None:
+            capacity_pages = max(1, (controller.geom.num_pages - 1) // 2)
+        self.capacity_pages = capacity_pages
+        self._root: Dict[Tuple[int, ...], _Node] = {}
+        self._pinned = 0
+        self._clock = itertools.count(1)
+        # stats
+        self.hits = 0
+        self.misses = 0
+        self.tokens_saved = 0
+        self.pages_evicted = 0
+
+    # ---------------------------------------------------------------- match
+
+    def match(self, prompt: Sequence[int], *, align: int = 1,
+              ) -> Tuple[List[int], int]:
+        """Longest cached chain covering a prefix of ``prompt``.
+
+        Returns (physical pages, tokens covered).  The match is trimmed so
+        that (a) at least ONE prompt token is left to feed — the engine
+        samples the first output from the final prefill chunk's logits, so
+        a whole-prompt hit must still run one chunk — and (b) the covered
+        length is a multiple of ``align`` (the engine's chunk size C:
+        chunks must keep starting on the C-grid the staging reserve
+        assumes)."""
+        pt = self.page_tokens
+        pages: List[int] = []
+        chain: List[_Node] = []
+        level = self._root
+        for i in range(len(prompt) // pt):
+            key = tuple(prompt[i * pt:(i + 1) * pt])
+            node = level.get(key)
+            if node is None:
+                break
+            pages.append(node.page)
+            chain.append(node)
+            level = node.children
+        # trim: leave >= 1 token to feed, and stay on the chunk grid
+        while pages and (len(pages) * pt >= len(prompt)
+                         or (len(pages) * pt) % align):
+            pages.pop()
+        # LRU-stamp only what the caller can actually ADOPT — stamping the
+        # trimmed tail would keep never-adoptable chains perpetually fresh
+        # and invert the eviction order for zero-value entries
+        tick = next(self._clock)
+        for node in chain[:len(pages)]:
+            node.last_used = tick
+        n_tokens = len(pages) * pt
+        if n_tokens:
+            self.hits += 1
+            self.tokens_saved += n_tokens
+        else:
+            self.misses += 1
+        return pages, n_tokens
+
+    # ---------------------------------------------------------------- insert
+
+    def insert(self, prompt: Sequence[int], extents: Dict[int, int]) -> int:
+        """Register a sequence's published prompt pages.
+
+        ``extents`` is the controller's committed extent map {logical page
+        index -> physical page} for the sequence that just finished
+        ingesting ``prompt``.  Only pages wholly inside the prompt are
+        cached (the page straddling prompt/output holds generated tokens).
+        Idempotent: an existing node for the same token chunk keeps its
+        page (first writer wins; the duplicate pin is never taken).
+        Returns the number of NEW pages pinned."""
+        pt = self.page_tokens
+        level = self._root
+        added = 0
+        tick = next(self._clock)
+        for i in range(len(prompt) // pt):
+            if i not in extents:
+                break                      # not published (shouldn't happen)
+            key = tuple(prompt[i * pt:(i + 1) * pt])
+            node = level.get(key)
+            if node is None:
+                if self._pinned >= self.capacity_pages and \
+                        not self._evict_one(before_tick=tick):
+                    break                  # at capacity, nothing evictable
+                node = _Node(page=extents[i])
+                self.controller.pin_page(node.page)
+                self._pinned += 1
+                level[key] = node
+                added += 1
+            node.last_used = tick
+            level = node.children
+        return added
+
+    # ---------------------------------------------------------------- evict
+
+    def release(self, n_pages: int) -> int:
+        """Evict pins until up to ``n_pages`` POOL pages are freed — the
+        engine's backpressure hook.  Only IDLE pins are touched (page
+        refcount 1, i.e. the cache holds the sole reference, so eviction
+        really returns the page); evicting a pin shared with a live
+        sequence would free nothing and cost a future hit.  Leaf-first
+        LRU among the idle; one trie scan evicts a whole batch of current
+        leaves (deleting one leaf cannot make another non-leaf), so
+        draining k pages costs O(k/width) scans, not k.  Returns pages
+        freed."""
+        freed = 0
+        while freed < n_pages:
+            idle = [t for t in self._leaves()
+                    if self.controller.page_refcount(t[2].page) == 1]
+            if not idle:
+                break
+            idle.sort(key=lambda t: t[2].last_used)
+            for level, key, node in idle[:n_pages - freed]:
+                self._evict(level, key, node)
+                freed += 1
+        return freed
+
+    def clear(self) -> None:
+        """Drop EVERY pin, shared or idle (teardown, tests)."""
+        while True:
+            leaves = self._leaves()
+            if not leaves:
+                break
+            for level, key, node in leaves:
+                self._evict(level, key, node)
+
+    def _leaves(self, before_tick: Optional[int] = None,
+                ) -> List[Tuple[Dict, Tuple[int, ...], "_Node"]]:
+        """All evictable leaves (nodes with no children — interior nodes
+        stay until every chain through them is gone, so a matched chain is
+        always adoptable whole).  ``before_tick`` exempts nodes stamped
+        at/after it: an in-flight insert stamps its walked chain first, so
+        eviction can never drop the parent (and with it the whole pinned
+        subtree) of the node being added."""
+        out: List[Tuple[Dict, Tuple[int, ...], _Node]] = []
+        stack: List[Dict[Tuple[int, ...], _Node]] = [self._root]
+        while stack:
+            level = stack.pop()
+            for key, node in level.items():
+                if node.children:
+                    stack.append(node.children)
+                elif before_tick is None or node.last_used < before_tick:
+                    out.append((level, key, node))
+        return out
+
+    def _evict(self, level: Dict, key: Tuple[int, ...], node: "_Node",
+               ) -> None:
+        del level[key]
+        self.controller.unpin_page(node.page)
+        self._pinned -= 1
+        self.pages_evicted += 1
+
+    def _evict_one(self, before_tick: Optional[int] = None) -> bool:
+        """Unpin one evictable leaf — IDLE victims first (refcount 1, same
+        preference as ``release``: a shared pin is a hot chain and
+        evicting it frees no pool page), LRU within each class."""
+        leaves = self._leaves(before_tick)
+        if not leaves:
+            return False
+        idle = [t for t in leaves
+                if self.controller.page_refcount(t[2].page) == 1]
+        self._evict(*min(idle or leaves, key=lambda t: t[2].last_used))
+        return True
+
+    # ---------------------------------------------------------------- stats
+
+    @property
+    def pinned_pages(self) -> int:
+        return self._pinned
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "tokens_saved": self.tokens_saved,
+                "pinned_pages": self._pinned,
+                "pages_evicted": self.pages_evicted}

@@ -1,0 +1,549 @@
+"""Session serving API (DESIGN.md §8): per-session consistency modes on
+one engine, prefix-cache admission (refcount invariants under admission/
+free/fork interleavings), per-request sampling, stalled-request flagging,
+and the open-loop arrival driver."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import PMDevice
+from repro.core.kvcache import KVGeometry, PagedKVCache, replay_kv_commits
+from repro.core.modes import Mode
+from repro.core.oplog import OP_KV_COMMIT, OpLog
+from repro.models import build_model
+from repro.models.spec import init_params
+from repro.serve import (ArrivalSpec, OpenLoopDriver, PrefixCache,
+                         SamplingParams, ServeClient, ServingEngine)
+from repro.serve.arrival import poisson_schedule, trace_schedule
+
+PROMPT = [5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17]
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    api = build_model(cfg)
+    params = init_params(api.init_specs(), jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def fresh_oplog():
+    device = PMDevice(size=4 * 1024 * 1024)
+    return device, OpLog(device, base_block=1, num_blocks=16)
+
+
+# ---------------------------------------------------------------- sessions
+
+
+def test_session_generate_streams_tokens(qwen):
+    """generate() yields tokens incrementally and in order; the stream
+    equals the request's final output."""
+    cfg, api, params = qwen
+    client = ServeClient(api, params, max_batch=2, max_seq=64, page_tokens=8)
+    sess = client.open_session()
+    got = []
+    for tok in sess.generate(PROMPT, max_new_tokens=6):
+        got.append(tok)
+    req = sess.requests[-1]
+    assert req.done and got == req.output and len(got) == 6
+
+
+def test_sessions_share_one_engine_and_batch(qwen):
+    """Two sessions' requests run concurrently on one engine: pumping one
+    session's generator advances the other's request too."""
+    cfg, api, params = qwen
+    client = ServeClient(api, params, max_batch=2, max_seq=64, page_tokens=8,
+                         prefix_cache=False)
+    a, b = client.open_session(), client.open_session()
+    rb = b.submit(PROMPT[:5], max_new_tokens=4)
+    out_a = list(a.generate(PROMPT[:7], max_new_tokens=4))
+    assert rb.done and len(rb.output) == 4 and len(out_a) == 4
+
+    # outputs must match a solo run (slot isolation through the shared step)
+    solo = ServeClient(api, params, max_batch=2, max_seq=64, page_tokens=8,
+                       prefix_cache=False)
+    r = solo.open_session().submit(PROMPT[:5], max_new_tokens=4)
+    solo.run_until_done()
+    assert r.output == rb.output
+
+
+def test_mixed_modes_strict_logs_posix_free(qwen):
+    """Per-seq modes: a STRICT and a POSIX session batch together; ONLY
+    the STRICT session's pages hit the oplog, and mid-flight crash replay
+    reconstructs exactly the STRICT session's committed extents."""
+    cfg, api, params = qwen
+    device, oplog = fresh_oplog()
+    client = ServeClient(api, params, max_batch=2, max_seq=64, page_tokens=8,
+                         oplog=oplog, prefix_cache=False)
+    strict = client.open_session(mode=Mode.STRICT)
+    posix = client.open_session(mode=Mode.POSIX)
+    rs = strict.submit(list(range(1, 25)), max_new_tokens=8)   # 3 pages
+    rp = posix.submit(list(range(30, 54)), max_new_tokens=8)   # 3 pages
+    for _ in range(3):
+        client.step()                     # both prompts fully ingested
+    assert not rs.in_prefill and not rp.in_prefill
+
+    entries = oplog.scan()
+    commits = [e for e in entries if e.op == OP_KV_COMMIT]
+    assert commits and all(e.inode == rs.seq_id for e in commits)
+    assert all(e.mode == int(Mode.STRICT) for e in commits)
+
+    # crash now: replay must rebuild exactly the STRICT extents, nothing
+    # of the POSIX neighbor
+    ctrl = client.engine.controller
+    expected = ctrl.committed_extents(rs.seq_id)
+    state = replay_kv_commits(OpLog(device, base_block=1, num_blocks=16,
+                                    fresh=False).scan())
+    assert state == {rs.seq_id: expected}
+
+    client.run_until_done()
+    assert rs.done and rp.done and len(rs.output) == len(rp.output) == 8
+
+
+def test_mode_and_sampling_survive_fork(qwen):
+    cfg, api, params = qwen
+    device, oplog = fresh_oplog()
+    eng = ServingEngine(api, params, max_batch=3, max_seq=64, page_tokens=8,
+                        oplog=oplog)
+    req = eng.submit(PROMPT, max_new_tokens=8, mode=Mode.STRICT,
+                     sampling=SamplingParams(temperature=0.5, top_k=7))
+    for _ in range(3):
+        eng.step()
+    child = eng.fork(req)
+    assert child.mode is Mode.STRICT and child.sampling == req.sampling
+    assert eng.controller.seq_mode(child.seq_id) is Mode.STRICT
+
+
+# ---------------------------------------------------------------- sampling
+
+
+def test_per_request_sampling_parameters(qwen):
+    """Per-request temperature/top-k replace the engine-global greedy
+    flag: a greedy request's output is unaffected by a stochastic
+    neighbor, and top_k=1 is exactly greedy at any temperature."""
+    cfg, api, params = qwen
+    solo = ServeClient(api, params, max_batch=2, max_seq=64, page_tokens=8,
+                       prefix_cache=False)
+    g = solo.open_session().submit(PROMPT, max_new_tokens=6)
+    solo.run_until_done()
+
+    client = ServeClient(api, params, max_batch=2, max_seq=64, page_tokens=8,
+                         prefix_cache=False)
+    greedy = client.open_session()                       # temperature 0
+    hot = client.open_session(temperature=1.5, top_k=20)
+    rg = greedy.submit(PROMPT, max_new_tokens=6)
+    rh = hot.submit(PROMPT[:7], max_new_tokens=6)
+    client.run_until_done()
+    assert rg.output == g.output                         # greedy untouched
+    assert len(rh.output) == 6
+
+    # top_k=1 == argmax regardless of temperature
+    k1 = ServeClient(api, params, max_batch=2, max_seq=64, page_tokens=8,
+                     prefix_cache=False)
+    r1 = k1.open_session(temperature=2.0, top_k=1).submit(
+        PROMPT, max_new_tokens=6)
+    k1.run_until_done()
+    assert r1.output == g.output
+
+
+def test_sampling_param_validation():
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1)
+
+
+# ---------------------------------------------------------------- stalled
+
+
+def test_run_until_done_flags_stalled_requests(qwen):
+    """Hitting max_steps with requests outstanding marks them stalled —
+    callers can tell timeout from completion — and a later full drive
+    clears the flag and finishes them."""
+    cfg, api, params = qwen
+    eng = ServingEngine(api, params, max_batch=1, max_seq=64, page_tokens=8)
+    a = eng.submit(PROMPT, max_new_tokens=4)
+    b = eng.submit(PROMPT[:5], max_new_tokens=4)         # queued behind a
+    done = eng.run_until_done(max_steps=2)
+    assert not a.done and a.stalled
+    assert not b.done and b.stalled and b.slot is None   # still waiting
+    assert done == []
+
+    # the step budget is PER-CALL, not lifetime: a second drive with the
+    # same budget makes real progress instead of returning instantly
+    eng.run_until_done(max_steps=2)
+    assert eng.steps == 4
+
+    done = eng.run_until_done()
+    assert a.done and b.done and not a.stalled and not b.stalled
+    assert len(done) == 2
+
+
+def test_abandoned_generator_cancels_request(qwen):
+    """Breaking out of a stream must release the request's slot and pages
+    — it must not keep decoding on other sessions' pumps."""
+    cfg, api, params = qwen
+    client = ServeClient(api, params, max_batch=1, max_seq=64, page_tokens=8,
+                         prefix_cache=False)
+    sess = client.open_session()
+    for tok in sess.generate(PROMPT, max_new_tokens=32):
+        break                                            # abandon the stream
+    req = sess.requests[-1]
+    assert req.cancelled and req.done and len(req.output) < 32
+    assert not client.engine.active and not client.engine.waiting
+    ctrl = client.engine.controller
+    assert ctrl.num_free_pages == ctrl.geom.num_pages - 1  # pages released
+
+    # the engine still serves new work afterwards
+    out = list(sess.generate(PROMPT[:5], max_new_tokens=3))
+    assert len(out) == 3
+
+
+def test_cancel_waiting_request(qwen):
+    cfg, api, params = qwen
+    eng = ServingEngine(api, params, max_batch=1, max_seq=64, page_tokens=8)
+    a = eng.submit(PROMPT, max_new_tokens=3)
+    b = eng.submit(PROMPT[:5], max_new_tokens=3)         # queued behind a
+    eng.cancel(b)
+    assert b.cancelled and b.done and b.slot is None
+    eng.run_until_done()
+    assert a.done and len(a.output) == 3
+
+
+# ---------------------------------------------------------------- prefix cache
+
+
+def test_prefix_admission_skips_prefill_and_pages(qwen):
+    """A second request sharing a published prefix adopts its pages:
+    fewer prefill steps, fewer fresh pages, identical output."""
+    cfg, api, params = qwen
+    prompt = list(range(1, 25))                          # 3 full pages @8
+
+    plain = ServeClient(api, params, max_batch=1, max_seq=64, page_tokens=8,
+                        prefix_cache=False)
+    p = plain.open_session().submit(prompt, max_new_tokens=5)
+    plain.run_until_done()
+
+    client = ServeClient(api, params, max_batch=1, max_seq=64, page_tokens=8)
+    sess = client.open_session()
+    eng = client.engine
+    first = sess.submit(prompt, max_new_tokens=5)
+    client.run_until_done()
+    alloc_after_first = eng.controller.pages_allocated
+
+    second = sess.submit(prompt, max_new_tokens=5)
+    steps0 = eng.steps
+    while second.in_prefill:
+        eng.step()
+    assert eng.steps - steps0 == 1                       # 1 chunk, not 3
+    assert second.prefix_tokens == 16                    # 2 pages adopted
+    client.run_until_done()
+    assert second.output == first.output == p.output
+    # the adopted span allocated nothing fresh
+    fresh = eng.controller.pages_allocated - alloc_after_first
+    assert fresh < 3 and eng.controller.pages_adopted == 2
+
+
+def test_prefix_cache_never_swallows_whole_prompt(qwen):
+    """Even on a full-trie hit at least one token must be fed — the first
+    output token is sampled from the final prefill chunk's logits."""
+    cfg, api, params = qwen
+    client = ServeClient(api, params, max_batch=1, max_seq=64, page_tokens=8)
+    sess = client.open_session()
+    prompt = list(range(1, 17))                          # exactly 2 pages
+    a = sess.submit(prompt, max_new_tokens=4)
+    client.run_until_done()
+    b = sess.submit(prompt, max_new_tokens=4)            # identical prompt
+    client.run_until_done()
+    assert b.prefix_tokens == 8                          # trimmed to 1 page
+    assert b.output == a.output
+
+
+def test_prefix_refcount_invariants_under_interleavings(qwen):
+    """No page leaked, no page freed while shared, CoW tail never aliased
+    across branches — under admission / free / fork interleavings."""
+    cfg, api, params = qwen
+    client = ServeClient(api, params, max_batch=3, max_seq=64, page_tokens=8)
+    eng = client.engine
+    ctrl = eng.controller
+    sess = client.open_session()
+    prompt = list(range(1, 25))
+
+    # wave 1: prime the trie, free the writer (pages must survive: pinned)
+    r1 = sess.submit(prompt, max_new_tokens=3)
+    client.run_until_done()
+    pinned = eng.prefix_cache.pinned_pages
+    assert pinned == 3                                   # 24 tokens = 3 pages
+                                                         # cached (match will
+                                                         # trim to 2 adoptable)
+    free_now = ctrl.num_free_pages
+    assert free_now == ctrl.geom.num_pages - 1 - pinned  # writer freed
+
+    # wave 2: two adopters admitted together + a fork mid-generation
+    r2 = sess.submit(prompt, max_new_tokens=6)
+    r3 = sess.submit(prompt[:16] + [99, 98, 97], max_new_tokens=6)
+    eng.step()                                           # admit + chunk
+    assert r2.prefix_tokens == 16 and r3.prefix_tokens == 16
+    for _ in range(3):
+        eng.step()
+    child = eng.fork(r2)                                 # CoW tail branch
+    # the shared tail was copied: branches write disjoint physical pages
+    t2 = ctrl.page_table()[r2.seq_id]
+    tc = ctrl.page_table()[child.seq_id]
+    tail_idx = ctrl.seq_length(r2.seq_id) // 8
+    assert t2[tail_idx] != tc[tail_idx]
+    # adopted prefix still shared (no copy), and still pinned by the trie
+    assert list(t2[:2]) == list(tc[:2])
+    client.run_until_done()
+
+    # drain: with every request finished, only trie pins hold pages
+    assert not eng.active and not eng.waiting
+    assert ctrl.num_free_pages == \
+        ctrl.geom.num_pages - 1 - eng.prefix_cache.pinned_pages
+    # release everything: the pool must come back whole (no leak, no
+    # double free)
+    eng.prefix_cache.clear()
+    assert eng.prefix_cache.pinned_pages == 0
+    assert ctrl.num_free_pages == ctrl.geom.num_pages - 1
+
+
+def test_prefix_cache_evicts_under_pool_pressure(qwen):
+    """Cached-but-idle prefixes are evicted (leaf-first LRU) before a live
+    request is truncated for want of pages."""
+    cfg, api, params = qwen
+    client = ServeClient(api, params, max_batch=1, max_seq=64, page_tokens=16)
+    eng = client.engine
+    ctrl = eng.controller
+    sess = client.open_session()
+    g = ctrl.geom
+    # fill most of the pool with cached prefixes
+    fill = (g.num_pages - 1) * g.page_tokens * 3 // 4
+    r = sess.submit(list(range(1, fill + 1)), max_new_tokens=1)
+    client.run_until_done()
+    assert eng.prefix_cache.pinned_pages > 0
+    # a big fresh prompt now needs more pages than are free
+    big = (g.num_pages - 1) * g.page_tokens // 2
+    need_prompt = [7000 + i for i in range(big)]
+    r2 = sess.submit(need_prompt, max_new_tokens=2)
+    client.run_until_done()
+    assert r2.done and not r2.truncated
+    assert eng.prefix_cache.pages_evicted > 0
+
+
+def test_prefix_cache_refused_for_recurrent_state_models():
+    """SSM/recurrent models fold every token into carried state; adopting
+    KV pages would skip those updates, so the engine refuses the cache."""
+    cfg = get_config("mamba2-1.3b", smoke=True)
+    api = build_model(cfg)
+    params = init_params(api.init_specs(), jax.random.PRNGKey(0))
+    eng = ServingEngine(api, params, max_batch=2, max_seq=32, page_tokens=8,
+                        prefix_cache=True)
+    assert eng.prefix_cache is None
+    r = eng.submit([1, 2, 3], max_new_tokens=3)
+    eng.run_until_done()
+    assert r.done and len(r.output) == 3
+
+
+def test_strict_adoption_is_replayable(qwen):
+    """Adopted extents log under the ADOPTER's mode: a STRICT session that
+    adopts a POSIX-published prefix still replays completely."""
+    cfg, api, params = qwen
+    device, oplog = fresh_oplog()
+    client = ServeClient(api, params, max_batch=2, max_seq=64, page_tokens=8,
+                         oplog=oplog)
+    posix = client.open_session(mode=Mode.POSIX)
+    strict = client.open_session(mode=Mode.STRICT)
+    prompt = list(range(1, 25))
+    posix.submit(prompt, max_new_tokens=2)
+    client.run_until_done()
+    assert len(oplog.scan()) == 0                        # POSIX logged nothing
+
+    rs = strict.submit(prompt, max_new_tokens=4)
+    while rs.in_prefill or not rs.output:
+        client.step()
+    state = replay_kv_commits(oplog.scan())
+    expected = client.engine.controller.committed_extents(rs.seq_id)
+    assert rs.prefix_tokens == 16 and len(expected) >= 2
+    assert state[rs.seq_id] == expected                  # incl. adopted pages
+    client.run_until_done()
+
+
+# ---------------------------------------------------------------- trie unit
+
+
+def test_trie_match_alignment_and_idempotent_insert():
+    kv = PagedKVCache(KVGeometry(num_pages=32, page_tokens=4, max_seqs=4,
+                                 pages_per_seq=8))
+    pc = PrefixCache(kv)
+    s = kv.create_seq()
+    prompt = list(range(1, 13))                          # 3 full pages
+    kv.append_tokens(s, 12)
+    ext = kv.committed_extents(s)
+    assert pc.insert(prompt, ext) == 3
+    assert pc.insert(prompt, ext) == 0                   # idempotent
+    # full-prompt hit is trimmed to leave one token
+    pages, n = pc.match(prompt, align=1)
+    assert n == 8 and pages == [ext[0], ext[1]]
+    # alignment: covered length must stay on the chunk grid
+    pages, n = pc.match(prompt + [77], align=8)
+    assert n == 8
+    pages, n = pc.match(prompt + [77], align=5)
+    assert n == 0                                        # 4,8,12 all off-grid
+    kv.free_seq(s)
+    assert kv.num_free_pages == 31 - 3                   # pins keep 3 pages
+    pc.clear()
+    assert kv.num_free_pages == 31
+
+
+def test_trie_eviction_is_leaf_first_and_idle_only():
+    """An interior page is never unpinned while a longer cached chain
+    still runs through it, and release() only touches IDLE pins — while
+    the writer lives, evicting its shared pages would free nothing."""
+    kv = PagedKVCache(KVGeometry(num_pages=32, page_tokens=4, max_seqs=4,
+                                 pages_per_seq=8))
+    pc = PrefixCache(kv, capacity_pages=16)
+    s = kv.create_seq()
+    kv.append_tokens(s, 12)
+    prompt = list(range(1, 13))
+    pc.insert(prompt, kv.committed_extents(s))
+    assert pc.release(1) == 0                            # all shared: no-op
+    assert pc.pinned_pages == 3
+    kv.free_seq(s)                                       # pins now idle
+    assert pc.release(1) == 1
+    assert pc.pinned_pages == 2
+    pages, n = pc.match(prompt + [0], align=1)           # chain shrank by one
+    assert n == 8
+    assert pc.release(10) == 2                           # drain fully
+    assert pc.pinned_pages == 0
+    assert kv.num_free_pages == 31
+
+
+def test_trie_capacity_evicts_lru():
+    kv = PagedKVCache(KVGeometry(num_pages=64, page_tokens=4, max_seqs=8,
+                                 pages_per_seq=4))
+    pc = PrefixCache(kv, capacity_pages=2)
+    a = kv.create_seq()
+    kv.append_tokens(a, 8)
+    pc.insert([1, 2, 3, 4, 5, 6, 7, 8], kv.committed_extents(a))
+    assert pc.pinned_pages == 2
+    b = kv.create_seq()
+    kv.append_tokens(b, 4)
+    pc.insert([9, 10, 11, 12], kv.committed_extents(b))
+    assert pc.pinned_pages == 2 and pc.pages_evicted >= 1
+    kv.free_seq(a)
+    kv.free_seq(b)
+    pc.clear()
+    assert kv.num_free_pages == 63
+
+
+# ---------------------------------------------------------------- controller
+
+
+def test_controller_per_seq_modes_coexist():
+    device = PMDevice(size=4 * 1024 * 1024)
+    oplog = OpLog(device, base_block=1, num_blocks=16)
+    kv = PagedKVCache(KVGeometry(num_pages=16, page_tokens=4, max_seqs=4,
+                                 pages_per_seq=4), oplog=oplog)
+    s_posix = kv.create_seq()                            # default POSIX
+    s_strict = kv.create_seq(mode=Mode.STRICT)
+    kv.append_tokens(s_posix, 8)
+    kv.append_tokens(s_strict, 8)
+    entries = oplog.scan()
+    assert len(entries) == 2
+    assert all(e.inode == s_strict for e in entries)
+    # adoption into a POSIX seq of STRICT-published pages logs nothing
+    s2 = kv.create_seq()
+    kv.adopt_prefix(s2, list(kv.committed_extents(s_strict).values()))
+    assert len(oplog.scan()) == 2
+    # the shared pages survive the STRICT writer's free (refcounted)
+    kv.free_seq(s_strict)
+    assert kv.committed_extents(s2)                      # still mapped
+    state = replay_kv_commits(oplog.scan())
+    assert s_strict not in state                         # tombstoned
+
+
+def test_adopt_prefix_rejects_bad_chains():
+    kv = PagedKVCache(KVGeometry(num_pages=16, page_tokens=4, max_seqs=4,
+                                 pages_per_seq=4))
+    s = kv.create_seq()
+    kv.append_tokens(s, 4)
+    with pytest.raises(ValueError):
+        kv.adopt_prefix(s, [1])                          # not a fresh seq
+    s2 = kv.create_seq()
+    with pytest.raises(ValueError):
+        kv.adopt_prefix(s2, [9])                         # free page
+
+
+# ---------------------------------------------------------------- arrival
+
+
+def test_poisson_and_trace_schedules():
+    a = poisson_schedule(16, rate_rps=100.0, seed=3)
+    b = poisson_schedule(16, rate_rps=100.0, seed=3)
+    assert a == b and len(a) == 16
+    assert all(x < y for x, y in zip(a, a[1:]))
+    t = trace_schedule([0.5, 0.25, 0.25])
+    assert t == pytest.approx([0.5, 0.75, 1.0])
+
+
+def test_open_loop_driver_measures_ttft_tpot(qwen):
+    cfg, api, params = qwen
+    client = ServeClient(api, params, max_batch=2, max_seq=64, page_tokens=8)
+    warm = client.open_session()
+    list(warm.generate([1, 2, 3], max_new_tokens=2))     # warm both shapes
+
+    rng = np.random.default_rng(0)
+    shared = list(rng.integers(1, cfg.vocab, 8))
+    sched = [0.0, 0.01, 0.02, 0.03]
+    workload = [ArrivalSpec(t, shared + list(rng.integers(1, cfg.vocab, 4)),
+                            max_new_tokens=4) for t in sched]
+    result = OpenLoopDriver(client).run(workload)
+    assert len(result.records) == 4
+    for rec in result.records:
+        assert rec.t_done is not None and rec.n_output == 4
+        assert rec.t_submit >= rec.spec.t_arrival        # never early
+        assert rec.ttft is not None and rec.ttft <= rec.latency
+        assert rec.tpot is not None and rec.tpot >= 0
+    pct = result.percentiles()
+    assert set(pct) == {"ttft", "tpot", "latency"}
+    assert pct["ttft"]["p50"] <= pct["ttft"]["p99"]
+    assert result.total_tokens == 16 and result.throughput_tok_s > 0
+
+
+def test_open_loop_time_scale_keeps_metrics_consistent(qwen):
+    """time_scale compresses the schedule AND the arrival baseline the
+    metrics are computed against — TTFT/latency stay non-negative."""
+    cfg, api, params = qwen
+    client = ServeClient(api, params, max_batch=2, max_seq=64, page_tokens=8)
+    warm = client.open_session()
+    list(warm.generate([1, 2, 3], max_new_tokens=2))
+    workload = [ArrivalSpec(0.5 * i, PROMPT[:6], max_new_tokens=3)
+                for i in range(3)]
+    result = OpenLoopDriver(client, time_scale=0.02).run(workload)
+    assert result.makespan < 5.0                         # schedule compressed
+    for rec in result.records:
+        assert rec.t_submit >= rec.t_arrival
+        assert rec.ttft is not None and rec.ttft >= 0
+        assert rec.latency is not None and rec.latency >= rec.ttft
+
+
+def test_open_loop_mixed_mode_sessions(qwen):
+    """The north-star shape: open-loop traffic split across STRICT and
+    POSIX sessions on one engine, prefix cache on."""
+    cfg, api, params = qwen
+    device, oplog = fresh_oplog()
+    client = ServeClient(api, params, max_batch=2, max_seq=64, page_tokens=8,
+                         oplog=oplog)
+    posix = client.open_session()
+    strict = client.open_session(mode=Mode.STRICT)
+    shared = list(range(1, 17))
+    workload = [ArrivalSpec(0.01 * i, shared + [100 + i], max_new_tokens=3,
+                            session=strict if i % 2 else posix)
+                for i in range(4)]
+    result = OpenLoopDriver(client, session=posix).run(workload)
+    assert all(r.t_done is not None for r in result.records)
+    reqs = client.engine.finished
+    assert {r.mode for r in reqs} == {Mode.POSIX, Mode.STRICT}
+    strict_sids = {r.seq_id for r in reqs if r.mode is Mode.STRICT}
+    commits = [e for e in oplog.scan() if e.op == OP_KV_COMMIT]
+    assert commits and {e.inode for e in commits} <= strict_sids
