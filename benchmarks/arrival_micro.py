@@ -10,6 +10,9 @@ Two measurements over the session serving API (DESIGN.md §8):
   2. open_loop — the same workload arriving open-loop (Poisson
      interarrivals through serve.arrival.OpenLoopDriver), reporting
      TTFT / TPOT / latency p50/p90/p99 and throughput, cache ON vs OFF.
+     The driver runs obs-instrumented, so each run also reports its
+     software-overhead split (client / scheduler / device / persistence
+     shares, DESIGN.md §10) and the 1-second profiler windows.
 
 Artifact: ``BENCH_arrival.json``.
 
@@ -29,6 +32,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import build_model
 from repro.models.spec import init_params
+from repro.obs import Obs
 from repro.serve import ArrivalSpec, OpenLoopDriver, ServeClient
 from repro.serve.arrival import poisson_schedule
 
@@ -45,9 +49,11 @@ def make_prompts(vocab: int, n: int, seed: int = 0) -> List[List[int]]:
             for _ in range(n)]
 
 
-def _client(api, params, *, prefix_cache: bool, max_batch: int) -> ServeClient:
+def _client(api, params, *, prefix_cache: bool, max_batch: int,
+            obs: Obs = None) -> ServeClient:
     return ServeClient(api, params, max_batch=max_batch, max_seq=128,
-                       page_tokens=PAGE_TOKENS, prefix_cache=prefix_cache)
+                       page_tokens=PAGE_TOKENS, prefix_cache=prefix_cache,
+                       obs=obs)
 
 
 def bench_prefix_admission(api, params, prompts, *, prefix_cache: bool,
@@ -82,16 +88,25 @@ def bench_prefix_admission(api, params, prompts, *, prefix_cache: bool,
 
 def bench_open_loop(api, params, prompts, *, prefix_cache: bool,
                     rate_rps: float, decode_tokens: int, seed: int) -> dict:
-    client = _client(api, params, prefix_cache=prefix_cache, max_batch=4)
+    obs = Obs(window_s=0.25)
+    client = _client(api, params, prefix_cache=prefix_cache, max_batch=4,
+                     obs=obs)
     # warm the compiled shapes so jit time doesn't pollute TTFT
     warm = client.open_session()
     list(warm.generate([1, 2, 3], max_new_tokens=2))
+    obs.ledger.reset()           # compile time is not device time
     sched = poisson_schedule(len(prompts), rate_rps, seed=seed)
     workload = [ArrivalSpec(t, p, decode_tokens)
                 for t, p in zip(sched, prompts)]
     result = OpenLoopDriver(client).run(workload)
     pct = result.percentiles()
+    breakdown = obs.ledger.breakdown()
     return {
+        "software_overhead": {
+            "shares": breakdown["shares"],
+            "software_frac": breakdown["software_frac"],
+            "phases": breakdown["phases"],
+        },
         "prefix_cache": prefix_cache,
         "rate_rps": rate_rps,
         "n": len(prompts),
@@ -174,6 +189,10 @@ def main() -> None:
         print(f"[arrival_micro] open-loop {tag}: {r['n']} reqs @ "
               f"{r['rate_rps']} rps: TTFT p50={ttft*1e3:.0f}ms "
               f"p99={p99*1e3:.0f}ms, {r['throughput_tok_s']:.0f} tok/s")
+        sh = r["software_overhead"]["shares"]
+        print(f"[arrival_micro]   overhead: client {sh['client']:.1%} "
+              f"sched {sh['scheduler']:.1%} device {sh['device']:.1%} "
+              f"persist {sh['persistence']:.1%}")
     print(f"[arrival_micro] wrote {args.out}")
 
 

@@ -6,7 +6,9 @@ EXPERIMENTS.md §Paper section is generated from these.
 
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 from typing import Dict, List
 
 import numpy as np
@@ -190,6 +192,36 @@ def table7_strata_write_io(n_ops: int = 4096) -> Dict[str, float]:
                 fs.fsync(h)
         fs.fsync(h)
         out[fs.name] = fs.meter.pm_bytes_written() / (n_ops * BLOCK_SIZE)
+    return out
+
+
+# ---------------------------------------------------------------- Table 5
+
+
+def software_overhead(bench_path: str = "BENCH_serve.json",
+                      ) -> Dict[str, Dict[str, float]]:
+    """The paper's Table-5 shape on the serving plane: per stage (prefill
+    row, decode row), where a unit of wall time goes — client (user-library
+    analogue), scheduler (kernel/host analogue), device (media analogue),
+    persistence (logging) — plus the software ratio (everything that is
+    not device compute).  Loads ``BENCH_serve.json`` when present (the
+    serve_micro artifact carries the measured breakdown); otherwise runs
+    serve_micro in fast mode to produce one."""
+    p = Path(bench_path)
+    if p.exists():
+        bench = json.loads(p.read_text())
+    else:
+        from . import serve_micro
+        bench = serve_micro.run(fast=True)
+    out: Dict[str, Dict[str, float]] = {}
+    for stage, d in bench.get("software_overhead", {}).items():
+        sh = d["shares"]
+        out[stage] = {
+            "client": sh["client"], "scheduler": sh["scheduler"],
+            "device": sh["device"], "persistence": sh["persistence"],
+            "software_ratio": d["software_frac"],
+            "wall_s": d["wall_s"], "steps": d["steps"],
+        }
     return out
 
 

@@ -13,7 +13,7 @@ from pathlib import Path
 
 from .common import CSV_HEADER
 from .paper_tables import (fig3_breakdown, fig4_io_patterns, recovery_time,
-                           table1_append, table6_syscalls,
+                           software_overhead, table1_append, table6_syscalls,
                            table7_strata_write_io)
 from .ycsb import fig5_software_overhead, run_ycsb
 
@@ -104,6 +104,13 @@ def main() -> None:
           f"baseline={sp['token_at_a_time_tok_s']:.0f}tok/s,"
           f"speedup={sp['speedup']:.1f}x,"
           f"publishes={serve['publishes']['chunked']}")
+
+    print("\n== Table 5 (serving): software-overhead attribution ==")
+    print("stage,client,scheduler,device,persistence,software_ratio")
+    for stage, row in software_overhead().items():
+        print(f"{stage},{row['client']:.3f},{row['scheduler']:.3f},"
+              f"{row['device']:.3f},{row['persistence']:.3f},"
+              f"{row['software_ratio']:.3f}")
 
     print("\n== serving front-end: prefix admission + open-loop arrivals ==")
     from . import arrival_micro

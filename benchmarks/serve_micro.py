@@ -8,7 +8,10 @@ path), plus steady-state decode throughput and the metadata publish count.
 
 Artifact: ``BENCH_serve.json`` —
   prefill.chunked_tok_s / prefill.token_at_a_time_tok_s / prefill.speedup
-  decode.tok_s, publishes.{chunked,token_at_a_time}, engine steps.
+  decode.tok_s, publishes.{chunked,token_at_a_time}, engine steps,
+  software_overhead.{prefill,decode} — the SplitFS-style attribution
+  (client / scheduler / device / persistence shares per stage, DESIGN.md
+  §10) — and obs_cost (enabled-instrumentation overhead vs the <2% bound).
 
   PYTHONPATH=src python -m benchmarks.serve_micro [--fast] [--out PATH]
 """
@@ -24,8 +27,12 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import PMDevice
+from repro.core.modes import Mode
+from repro.core.oplog import OpLog
 from repro.models import build_model
 from repro.models.spec import init_params
+from repro.obs import Obs
 from repro.serve import ServingEngine
 
 PROMPT_LEN = 512        # acceptance point: >= 5x at prompt length 512
@@ -75,6 +82,83 @@ def bench_prefill(api, params, chunk_tokens: int, *, prompt_len: int,
     }
 
 
+def bench_overhead(api, params, *, prompt_len: int,
+                   decode_tokens: int) -> dict:
+    """Per-stage software-overhead attribution (the paper's Table-5 split,
+    serving edition): run one STRICT request on an obs-instrumented engine
+    with a real oplog, wall-time the prefill and decode stages, and report
+    each stage's client / scheduler / device / persistence shares.  The
+    ledger resets after warmup so jit compile time never lands in the
+    device bucket; client time per stage is the wall clock the engine
+    buckets don't cover (submit, loop, bookkeeping)."""
+    max_seq = prompt_len + decode_tokens + 2 * PAGE_TOKENS
+    pm = PMDevice(size=8 * 1024 * 1024)
+    oplog = OpLog(pm, base_block=1, num_blocks=64)
+    obs = Obs()
+    eng = ServingEngine(api, params, max_batch=1, max_seq=max_seq,
+                        page_tokens=PAGE_TOKENS, mode=Mode.STRICT,
+                        oplog=oplog, obs=obs)
+    warm = eng.submit([1, 2, 3], max_new_tokens=2)
+    eng.run_until_done()
+    assert warm.done
+    obs.ledger.reset()
+    rng = np.random.default_rng(0)
+    prompt = list(rng.integers(1, api.cfg.vocab, prompt_len))
+    req = eng.submit(prompt, max_new_tokens=decode_tokens)
+    t0 = time.perf_counter()
+    while req.in_prefill:
+        eng.step()
+    wall_prefill = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    eng.run_until_done()
+    wall_decode = time.perf_counter() - t0
+    assert req.done
+    out: dict = {}
+    for stage, wall in (("prefill", wall_prefill), ("decode", wall_decode)):
+        tot = obs.ledger.phase_totals(stage)
+        eng_ns = tot["scheduler"] + tot["device"] + tot["persistence"]
+        client_ns = max(int(wall * 1e9) - eng_ns, 0)
+        total = eng_ns + client_ns
+        out[stage] = {
+            "wall_s": wall,
+            "steps": tot["steps"],
+            "shares": {
+                "client": client_ns / total,
+                "scheduler": tot["scheduler"] / total,
+                "device": tot["device"] / total,
+                "persistence": tot["persistence"] / total,
+            },
+            "software_frac": 1.0 - tot["device"] / total,
+        }
+    return out
+
+
+def bench_obs_cost(api, params, *, decode_tokens: int, reps: int = 3) -> dict:
+    """Enabled-instrumentation cost: identical post-warmup decode runs with
+    obs off vs on (counters + ledger + profiler; no tracing), min-of-reps
+    so scheduler noise doesn't masquerade as overhead.  CI asserts the
+    fraction under the DESIGN.md §10 bound (0.02)."""
+    def one(obs) -> float:
+        eng = ServingEngine(api, params, max_batch=1, max_seq=128,
+                            page_tokens=PAGE_TOKENS, obs=obs)
+        warm = eng.submit([1, 2, 3], max_new_tokens=2)
+        eng.run_until_done()
+        assert warm.done
+        req = eng.submit(list(range(1, 9)), max_new_tokens=decode_tokens)
+        while req.in_prefill:
+            eng.step()
+        t0 = time.perf_counter()
+        eng.run_until_done()
+        dt = time.perf_counter() - t0
+        assert req.done
+        return dt
+
+    off = min(one(None) for _ in range(reps))
+    on = min(one(Obs()) for _ in range(reps))
+    return {"decode_s_obs_off": off, "decode_s_obs_on": on,
+            "enabled_overhead_frac": max(on - off, 0.0) / off}
+
+
 def run(fast: bool = False, arch: str = "qwen2-1.5b") -> dict:
     cfg = get_config(arch, smoke=True)
     api = build_model(cfg)
@@ -84,6 +168,10 @@ def run(fast: bool = False, arch: str = "qwen2-1.5b") -> dict:
                             prompt_len=PROMPT_LEN, decode_tokens=decode_tokens)
     baseline = bench_prefill(api, params, 1,
                              prompt_len=PROMPT_LEN, decode_tokens=decode_tokens)
+    overhead = bench_overhead(api, params, prompt_len=PROMPT_LEN,
+                              decode_tokens=decode_tokens)
+    obs_cost = bench_obs_cost(api, params, decode_tokens=decode_tokens,
+                              reps=2 if fast else 3)
     return {
         "bench": "serve_micro",
         "arch": arch,
@@ -104,6 +192,8 @@ def run(fast: bool = False, arch: str = "qwen2-1.5b") -> dict:
             "chunked": chunked["publishes"],
             "token_at_a_time": baseline["publishes"],
         },
+        "software_overhead": overhead,
+        "obs_cost": obs_cost,
         "raw": {"chunked": chunked, "token_at_a_time": baseline},
     }
 
@@ -126,6 +216,16 @@ def main() -> None:
           f"{result['decode']['chunked_engine_tok_s']:.0f} tok/s; publishes "
           f"chunked={result['publishes']['chunked']} "
           f"baseline={result['publishes']['token_at_a_time']}")
+    for stage, d in result["software_overhead"].items():
+        sh = d["shares"]
+        print(f"[serve_micro] overhead {stage}: "
+              f"client {sh['client']:.1%} sched {sh['scheduler']:.1%} "
+              f"device {sh['device']:.1%} persist {sh['persistence']:.1%} "
+              f"(software {d['software_frac']:.1%})")
+    oc = result["obs_cost"]
+    print(f"[serve_micro] obs enabled-cost: "
+          f"{oc['enabled_overhead_frac']:.2%} on decode "
+          f"({oc['decode_s_obs_off']:.3f}s -> {oc['decode_s_obs_on']:.3f}s)")
     print(f"[serve_micro] wrote {args.out}")
 
 

@@ -4,9 +4,14 @@ this is the required end-to-end example).
 
 Shows the three front-end features of DESIGN.md §8: sessions with
 different consistency modes coexisting on one engine, prefix-cache
-admission deduplicating a shared prompt prefix, and the zero-copy fork.
+admission deduplicating a shared prompt prefix, and the zero-copy fork —
+plus the observability plane (DESIGN.md §10): ``--trace out.json`` writes
+a Chrome trace-event file (open in Perfetto / chrome://tracing) and the
+run prints where each stage's wall time went (scheduler / device /
+persistence) with session-level stats.
 
     PYTHONPATH=src python examples/serve_kv.py [--arch qwen2-1.5b]
+    PYTHONPATH=src python examples/serve_kv.py --trace serve_trace.json
 """
 
 import argparse
@@ -21,6 +26,7 @@ from repro.core.modes import Mode
 from repro.core.oplog import OpLog
 from repro.models import build_model
 from repro.models.spec import init_params
+from repro.obs import Obs
 from repro.serve import ServeClient
 
 
@@ -29,6 +35,8 @@ def main() -> None:
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2-1.5b")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome trace-event JSON of the run here")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -36,8 +44,9 @@ def main() -> None:
     params = init_params(api.init_specs(), jax.random.PRNGKey(0))
     oplog = OpLog(PMDevice(size=16 * 1024 * 1024), base_block=1,
                   num_blocks=64)
+    obs = Obs(trace=bool(args.trace))
     client = ServeClient(api, params, max_batch=args.max_batch,
-                         max_seq=128, page_tokens=16, oplog=oplog)
+                         max_seq=128, page_tokens=16, oplog=oplog, obs=obs)
 
     # two applications, two consistency modes, ONE engine: the STRICT
     # session's page publishes are oplogged; the POSIX one rides free
@@ -84,6 +93,23 @@ def main() -> None:
     print(f"forked request {r.rid}->{child.rid}: parent={r.output} "
           f"child={child.output} (shared prefix pages, "
           f"{engine.controller.pages_copied} CoW copies total)")
+
+    # observability: where did the time go?  (SplitFS-style attribution —
+    # client / scheduler / device / persistence, DESIGN.md §10)
+    bd = obs.ledger.breakdown()
+    for phase, d in bd["phases"].items():
+        sh = d["shares"]
+        print(f"overhead [{phase}]: scheduler {sh['scheduler']:.1%}  "
+              f"device {sh['device']:.1%}  "
+              f"persistence {sh['persistence']:.1%}  ({d['steps']} steps)")
+    ss = strict.stats()
+    print(f"strict session: {ss['submitted']} requests, "
+          f"{ss['tokens_out']} tokens, "
+          f"oplog appends={client.stats()['obs']['counters'].get('oplog.appends', 0)}")
+    if args.trace:
+        client.dump_trace(args.trace)
+        print(f"trace -> {args.trace} (open in Perfetto or "
+              f"chrome://tracing)")
 
 
 if __name__ == "__main__":

@@ -33,6 +33,7 @@ without ever touching published data — the superblock-style reservation.
 from __future__ import annotations
 
 import threading
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Tuple
@@ -100,12 +101,21 @@ class PagedKVCache:
         self._page_table = np.zeros((geom.max_seqs, geom.pages_per_seq),
                                     dtype=np.int32)
         self._seq_lens = np.zeros(geom.max_seqs, dtype=np.int32)
-        # stats (the serving-plane analogues of StoreStats)
+        # stats (the serving-plane analogues of StoreStats); all plain int
+        # attributes so the obs registry can read them lazily at snapshot
+        # time (repro.obs.attach_serving) — zero hot-path cost
         self.pages_relinked = 0     # metadata-only publishes
         self.pages_copied = 0       # CoW copies (partial-page forks)
         self.pages_allocated = 0    # fresh allocations (prefix hits avoid these)
         self.pages_adopted = 0      # shared via prefix-cache attach
+        self.pages_freed = 0        # returned to the free list (in_use =
+                                    # allocated - freed, the pool gauge)
+        self.pins_taken = 0         # cache-owned refcount pins (pin_page)
+        self.pad_fallbacks = 0      # over-reserve shortfalls: pad tokens
+                                    # routed to the null page instead
         self.alloc_failures = 0
+        self.persist_ns = 0         # wall ns inside oplog publishes (the
+                                    # ledger's persistence component)
 
     # ------------------------------------------------------------- allocation
 
@@ -122,11 +132,19 @@ class PagedKVCache:
         self._refcount[p] -= 1
         if self._refcount[p] == 0:
             self._free.append(p)
+            self.pages_freed += 1
 
     @property
     def num_free_pages(self) -> int:
         with self._lock:
             return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        """Pool occupancy gauge; equals pages_allocated - pages_freed by
+        construction (tests/test_obs.py holds this across interleavings)."""
+        with self._lock:
+            return self.geom.num_pages - 1 - len(self._free)
 
     # ------------------------------------------------------------- sequence ops
 
@@ -211,6 +229,10 @@ class PagedKVCache:
                 self._page_table[sid, len(seq.pages)] = p
                 seq.pages.append(p)
                 added.append(p)
+            # over-reserve shortfall: the chunk's pad positions will route
+            # through zero table entries to the null page (harmless by
+            # construction, but worth counting — it flags pool pressure)
+            self.pad_fallbacks += desired - len(seq.pages)
             seq.length = new_len
             self._seq_lens[sid] = new_len
             return added, self._commit_locked(seq)
@@ -248,20 +270,24 @@ class PagedKVCache:
         a POSIX/SYNC sequence publishes for free."""
         if self.oplog is None or not seq.mode.logs_ops:
             return
+        t0 = time.perf_counter_ns()
         self.oplog.append(LogEntry(
             op=OP_KV_COMMIT, mode=int(seq.mode),
             seqno=self.oplog.next_seqno(), inode=seq.sid, offset=page_idx,
             length=self.geom.page_tokens, staging_addr=seq.pages[page_idx],
             aux1=seq.length))
+        self.persist_ns += time.perf_counter_ns() - t0
 
     def _log_ctl(self, seq: _Seq, op: int, keep_pages: int) -> None:
         """Unlink/truncate tombstones: replay must not resurrect extents of
         freed (or rolled-back) sequences whose sid/pages were reused."""
         if self.oplog is None or not seq.mode.logs_ops:
             return
+        t0 = time.perf_counter_ns()
         self.oplog.append(LogEntry(
             op=op, mode=int(seq.mode), seqno=self.oplog.next_seqno(),
             inode=seq.sid, offset=keep_pages, length=0, staging_addr=0))
+        self.persist_ns += time.perf_counter_ns() - t0
 
     def seq_mode(self, sid: int) -> Mode:
         with self._lock:
@@ -349,6 +375,7 @@ class PagedKVCache:
             if self._refcount[p] <= 0:
                 raise ValueError(f"cannot pin free page {p}")
             self._refcount[p] += 1
+            self.pins_taken += 1
 
     def page_refcount(self, p: int) -> int:
         """Current reference count (live sequences + cache pins) — lets

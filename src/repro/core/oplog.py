@@ -100,12 +100,19 @@ class OpLog:
         self._tail_lock = threading.Lock()
         self._tail_value = 0
         self._seq = itertools.count(1)
+        # plain-int stats, read lazily by the obs registry (DESIGN.md §10)
+        self.appends = 0
+        self.appends_by_mode: dict = {}      # Mode int -> publishes
+        self.entries_scanned = 0             # valid entries seen by recovery
 
     # -- append (the hot path: 1 line + 1 fence) ---------------------------------
 
     def append(self, entry: LogEntry) -> int:
         slot = self._advance_tail()
         addr = self.base + slot * CACHELINE
+        self.appends += 1
+        self.appends_by_mode[entry.mode] = \
+            self.appends_by_mode.get(entry.mode, 0) + 1
         dev = self.device
         dev.meter.add("cas", 1)          # DRAM tail CAS
         dev.meter.add("checksum_bytes", 60)
@@ -152,4 +159,5 @@ class OpLog:
             entry = LogEntry.unpack(raw)
             if entry is not None:
                 out.append(entry)
+        self.entries_scanned += len(out)
         return out

@@ -55,6 +55,11 @@ class HeartbeatMonitor:
             w: _WorkerState(last_beat=now) for w in workers}
         self._alive = set(workers)
         self._flagged: set = set()
+        # plain-int stats, read lazily by the obs registry (DESIGN.md §10)
+        self.beats = 0
+        self.heartbeats_missed = 0           # timeout detections
+        self.deaths = 0
+        self.straggler_flags = 0             # workers newly flagged slow
 
     # ------------------------------------------------------------ heartbeats
 
@@ -66,6 +71,7 @@ class HeartbeatMonitor:
         st.last_beat = time.monotonic() if now is None else now
         st.step = step
         st.step_time = step_time
+        self.beats += 1
 
     def dead_workers(self, *, now: Optional[float] = None) -> List[int]:
         """Alive workers whose heartbeat has timed out."""
@@ -74,6 +80,9 @@ class HeartbeatMonitor:
                       if t - self._state[w].last_beat > self.timeout_s)
 
     def mark_dead(self, worker: int) -> None:
+        if worker in self._alive:
+            self.heartbeats_missed += 1
+            self.deaths += 1
         self._alive.discard(worker)
         self._flagged.discard(worker)
 
@@ -95,6 +104,8 @@ class HeartbeatMonitor:
             if st.step >= 0 and st.step_time > self.straggler_factor * median:
                 st.slow_polls += 1
                 if st.slow_polls >= self.patience:
+                    if w not in self._flagged:
+                        self.straggler_flags += 1
                     self._flagged.add(w)
             else:
                 st.slow_polls = 0
@@ -170,6 +181,8 @@ class FaultPolicy:
         self.model_axis = model_axis
         self.pod_axis = pod_axis
         self._mitigated: set = set()          # stragglers already stolen from
+        self.steals = 0                       # mitigation counters (obs)
+        self.remeshes = 0
 
     def poll(self, *, now: Optional[float] = None,
              restore_step: Optional[int] = None):
@@ -190,6 +203,7 @@ class FaultPolicy:
                                    pod_axis=self.pod_axis,
                                    restore_step=restore_step)
                 self.assignment = dict(plan.data_shard_of)
+                self.remeshes += 1
                 return plan
             return None                       # only shard-less workers died
         stragglers = self.monitor.stragglers()
@@ -210,6 +224,7 @@ class FaultPolicy:
             self.assignment = dict(steal.data_shard_of)
             self.spares = [s for s in self.spares if s != steal.spare]
             self._mitigated.add(w)
+            self.steals += 1
             return steal
         return None
 

@@ -309,26 +309,32 @@ def run_cells(cells, *, multi_pod: bool, serve_impl: str, out_dir: Path,
     return results
 
 
-def smoke_serve_sessions(arch: str, out_dir: Path) -> dict:
+def smoke_serve_sessions(arch: str, out_dir: Path, *,
+                         trace: bool = False) -> dict:
     """End-to-end session-API smoke (CI gate): two sessions in different
     consistency modes on ONE engine, a shared-prefix workload through
     prefix-cache admission, and a tiny open-loop arrival run.  Gates that
     the serving FRONT-END works, where the cells above gate that the
-    serving PROGRAM compiles."""
+    serving PROGRAM compiles.  With ``trace=True`` the run is
+    obs-instrumented: a validated Chrome trace lands in
+    ``out_dir/serve_trace.json`` and the record carries the overhead
+    breakdown + counter snapshot (the CI obs cell)."""
     import numpy as np
 
     from ..core import PMDevice
     from ..core.modes import Mode
     from ..core.oplog import OpLog
     from ..models.spec import init_params
+    from ..obs import Obs, validate_chrome_trace
     from ..serve import ArrivalSpec, OpenLoopDriver, ServeClient
 
     cfg = get_config(arch, smoke=True)
     api = build_model(cfg)
     params = init_params(api.init_specs(), jax.random.PRNGKey(0))
     oplog = OpLog(PMDevice(size=8 * 1024 * 1024), base_block=1, num_blocks=32)
+    obs = Obs(trace=True, window_s=0.25) if trace else None
     client = ServeClient(api, params, max_batch=2, max_seq=64,
-                         page_tokens=8, oplog=oplog)
+                         page_tokens=8, oplog=oplog, obs=obs)
     posix = client.open_session()
     strict = client.open_session(mode=Mode.STRICT)
     rng = np.random.default_rng(0)
@@ -348,6 +354,20 @@ def smoke_serve_sessions(arch: str, out_dir: Path) -> dict:
               "stats": {k: v for k, v in result.stats.items()
                         if k != "utilization"}}
     out_dir.mkdir(parents=True, exist_ok=True)
+    if obs is not None:
+        trace_path = out_dir / "serve_trace.json"
+        obs.dump_trace(str(trace_path))
+        problems = validate_chrome_trace(
+            json.loads(trace_path.read_text()))
+        if problems:
+            record["status"] = "failed"
+            record["trace_problems"] = problems[:10]
+        record["trace"] = str(trace_path)
+        record["trace_events"] = len(obs.tracer)
+        record["overhead"] = obs.ledger.breakdown()
+        print(f"[dryrun] serve_sessions trace: {trace_path} "
+              f"({len(obs.tracer)} events, "
+              f"{'INVALID' if problems else 'valid'})")
     (out_dir / "serve_sessions.json").write_text(
         json.dumps(record, indent=2, default=str))
     pc = result.stats.get("prefix_cache", {})
@@ -383,12 +403,16 @@ def main() -> None:
     ap.add_argument("--serve-sessions", action="store_true",
                     help="end-to-end session-API smoke (mixed-mode "
                          "sessions + prefix cache + open-loop arrivals)")
+    ap.add_argument("--trace", action="store_true",
+                    help="with --serve-sessions: obs-instrument the run "
+                         "and write a validated Chrome trace "
+                         "(out/serve_trace.json)")
     ap.add_argument("--out", default="runs/dryrun")
     args = ap.parse_args()
 
     if args.serve_sessions:
         record = smoke_serve_sessions(args.arch or "qwen2-1.5b",
-                                      Path(args.out))
+                                      Path(args.out), trace=args.trace)
         if record["status"] != "ok":
             raise SystemExit(1)
         return

@@ -25,6 +25,7 @@ from ..core.modes import Mode
 from ..core.oplog import OpLog
 from ..models import build_model
 from ..models.spec import init_params
+from ..obs import Obs
 from ..serve import ArrivalSpec, OpenLoopDriver, ServeClient
 from ..serve.arrival import poisson_schedule
 
@@ -64,6 +65,12 @@ def main() -> None:
     ap.add_argument("--rate", type=float, default=0.0,
                     help="open-loop Poisson arrival rate in req/s "
                          "(0 = submit everything up front)")
+    ap.add_argument("--trace", default="",
+                    help="obs-instrument the run and write a Chrome "
+                         "trace-event JSON here (view in Perfetto)")
+    ap.add_argument("--stats", action="store_true",
+                    help="obs-instrument the run and print the overhead "
+                         "breakdown + windowed throughput")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -75,10 +82,12 @@ def main() -> None:
     if any(m.logs_ops for m in modes):
         oplog = OpLog(PMDevice(size=16 * 1024 * 1024), base_block=1,
                       num_blocks=64)
+    obs = Obs(trace=bool(args.trace)) if (args.trace or args.stats) else None
     client = ServeClient(api, params, max_batch=args.max_batch,
                          max_seq=args.max_seq, page_tokens=args.page_tokens,
                          chunk_tokens=args.chunk_tokens or None,
-                         oplog=oplog, prefix_cache=not args.no_prefix_cache)
+                         oplog=oplog, prefix_cache=not args.no_prefix_cache,
+                         obs=obs)
     sessions = [client.open_session(mode=m, temperature=args.temperature,
                                     top_k=args.top_k) for m in modes]
     rng = np.random.default_rng(args.seed)
@@ -128,6 +137,22 @@ def main() -> None:
                if r.stalled]
     if stalled:
         print(f"[serve] WARNING: {len(stalled)} requests stalled (timeout)")
+    if obs is not None:
+        bd = obs.ledger.breakdown()
+        for phase, d in bd["phases"].items():
+            sh = d["shares"]
+            print(f"[serve] overhead {phase}: sched {sh['scheduler']:.1%} "
+                  f"device {sh['device']:.1%} "
+                  f"persist {sh['persistence']:.1%} ({d['steps']} steps)")
+        windows = obs.profiler.windows()
+        if windows:
+            peak = max(w.tok_s for w in windows)
+            print(f"[serve] {len(windows)} profiler windows, "
+                  f"peak {peak:.0f} tok/s")
+        if args.trace:
+            client.dump_trace(args.trace)
+            print(f"[serve] trace -> {args.trace} "
+                  f"({len(obs.tracer)} events)")
     for r in done[:3]:
         print(f"  req {r.rid} [{r.mode.name}]: prompt[{len(r.prompt)}] "
               f"prefix_hit={r.prefix_tokens} -> {r.output}")

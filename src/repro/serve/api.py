@@ -30,6 +30,7 @@ from typing import Dict, Iterator, List, Optional
 from ..core.modes import Mode
 from ..core.oplog import OpLog
 from ..models.registry import ModelAPI
+from ..obs import Obs
 from .engine import Request, SamplingParams, ServingEngine
 
 
@@ -102,6 +103,26 @@ class Session:
         submissions (in-flight requests drain normally)."""
         self.closed = True
 
+    def stats(self) -> Dict[str, object]:
+        """This session's view: request progress plus (when the client is
+        instrumented) its requests' overhead ledgers and the shared engine
+        counters/windows."""
+        out: Dict[str, object] = {
+            "session_id": self.session_id,
+            "mode": self.mode.name,
+            "submitted": len(self.requests),
+            "done": sum(r.done for r in self.requests),
+            "tokens_out": sum(len(r.output) for r in self.requests),
+        }
+        ledgers = [r.ledger for r in self.requests if r.ledger]
+        if ledgers:
+            out["overhead_ns"] = {
+                k: sum(led[k] for led in ledgers) for k in ledgers[0]}
+        obs = self.client.engine.obs
+        if obs is not None:
+            out["engine"] = obs.stats()
+        return out
+
     # ------------------------------------------------------------------ misc
 
     def _sampling(self, temperature: Optional[float],
@@ -130,11 +151,14 @@ class ServeClient:
                  chunk_tokens: Optional[int] = None, seed: int = 0,
                  default_mode: Mode = Mode.POSIX,
                  oplog: Optional[OpLog] = None,
-                 prefix_cache: bool = True) -> None:
+                 prefix_cache: bool = True,
+                 obs: Optional[Obs] = None) -> None:
         self.engine = ServingEngine(
             api, params, max_batch=max_batch, max_seq=max_seq,
             page_tokens=page_tokens, chunk_tokens=chunk_tokens, seed=seed,
-            mode=default_mode, oplog=oplog, prefix_cache=prefix_cache)
+            mode=default_mode, oplog=oplog, prefix_cache=prefix_cache,
+            obs=obs)
+        self.obs = obs
         self._sids = itertools.count()
         self.sessions: Dict[int, Session] = {}
 
@@ -173,4 +197,13 @@ class ServeClient:
         }
         if self.engine.prefix_cache is not None:
             out["prefix_cache"] = self.engine.prefix_cache.stats()
+        if self.obs is not None:
+            out["obs"] = self.obs.stats()
         return out
+
+    def dump_trace(self, path: str) -> None:
+        """Write the Chrome trace-event JSON (requires ``Obs(trace=True)``
+        at construction); view in Perfetto / chrome://tracing."""
+        if self.obs is None:
+            raise ValueError("client built without obs")
+        self.obs.dump_trace(path)

@@ -129,6 +129,12 @@ class OpenLoopDriver:
                    for s in specs]
         live: Dict[int, tuple] = {}              # rid -> (request, record)
         eng = self.client.engine
+        obs = eng.obs
+        if obs is not None:
+            busy0 = sum(sum(obs.ledger.phase_totals(p)[c]
+                            for c in ("scheduler", "device", "persistence"))
+                        for p in ("prefill", "decode"))
+        sleep_s = 0.0
         steps0 = eng.steps
         i = 0
         t0 = time.perf_counter()
@@ -159,8 +165,21 @@ class OpenLoopDriver:
             elif i < len(specs):
                 gap = records[i].t_arrival - now
                 if gap > 0:
-                    time.sleep(min(gap, 0.05))
+                    nap = min(gap, 0.05)
+                    time.sleep(nap)
+                    sleep_s += nap
         makespan = time.perf_counter() - t0
+        if obs is not None:
+            # client/front-end attribution: the wall time this driver spent
+            # OUTSIDE the engine and not asleep waiting for arrivals —
+            # submission, record-keeping, scheduling overhead (the SplitFS
+            # user-library bucket; the engine buckets the rest per step)
+            busy = sum(sum(obs.ledger.phase_totals(p)[c]
+                           for c in ("scheduler", "device", "persistence"))
+                       for p in ("prefill", "decode"))
+            obs.ledger.add_client(
+                int(makespan * 1e9) - (busy - busy0) - int(sleep_s * 1e9))
+            obs.profiler.flush()
         total = sum(r.n_output for r in records)
         return ArrivalResult(records=records, makespan=makespan,
                              total_tokens=total, engine_steps=eng.steps - steps0,

@@ -35,6 +35,7 @@ Sampling is greedy or softmax on the host.
 from __future__ import annotations
 
 import itertools
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -46,6 +47,7 @@ from ..core.kvcache import PagedKVCache
 from ..core.modes import Mode
 from ..core.oplog import OpLog
 from ..models.registry import ModelAPI
+from ..obs import Obs, attach_serving
 from .prefix_cache import PrefixCache
 
 
@@ -86,6 +88,13 @@ class Request:
     truncated: bool = False              # finished early (pool backpressure)
     stalled: bool = False                # run_until_done hit max_steps first
     cancelled: bool = False              # aborted by the caller
+    # obs-only fields (None/0 when the engine runs uninstrumented): raw
+    # perf_counter_ns stamps plus the per-request overhead ledger.  Shared
+    # batch time is attributed by even split across the step's
+    # participants, so request ledgers sum to the engine's phase totals.
+    t_submit_ns: int = 0
+    t_admit_ns: int = 0
+    ledger: Optional[Dict[str, int]] = None
 
     @property
     def in_prefill(self) -> bool:
@@ -98,7 +107,8 @@ class ServingEngine:
                  chunk_tokens: Optional[int] = None, greedy: bool = True,
                  seed: int = 0, mode: Mode = Mode.POSIX,
                  oplog: Optional[OpLog] = None,
-                 prefix_cache: "bool | PrefixCache | None" = None) -> None:
+                 prefix_cache: "bool | PrefixCache | None" = None,
+                 obs: Optional[Obs] = None) -> None:
         self.api = api
         self.params = params
         self.max_batch = max_batch
@@ -136,6 +146,16 @@ class ServingEngine:
         self.finished: List[Request] = []
         self._rid = itertools.count()
         self.steps = 0
+        # plain-int stats, read lazily by the obs registry (DESIGN.md §10);
+        # kept unconditionally — incrementing an int costs nothing, and
+        # benches read them even with obs off
+        self.tokens_processed = 0
+        self.truncations = 0
+        self.cancels = 0
+        self.backpressure_stalls = 0
+        self.obs = obs
+        if obs is not None:
+            attach_serving(obs, self)
 
     # ------------------------------------------------------------------ API
 
@@ -165,6 +185,12 @@ class ServingEngine:
                       mode=self.controller.mode if mode is None else mode,
                       sampling=self.default_sampling if sampling is None
                       else sampling)
+        if self.obs is not None:
+            req.t_submit_ns = time.perf_counter_ns()
+            if self.obs.tracer is not None:
+                self.obs.tracer.instant(
+                    "submit", "serve",
+                    args={"rid": req.rid, "prompt": len(req.prompt)})
         self.waiting.append(req)
         return req
 
@@ -197,18 +223,44 @@ class ServingEngine:
             # starts past them so the first real chunk lands after the
             # shared span
             start = 0
+            obs = self.obs
+            tracer = obs.tracer if obs is not None else None
             if self.prefix_cache is not None and req.in_prefill:
                 pages, n_tok = self.prefix_cache.match(req.prompt,
                                                        align=self.chunk)
                 if n_tok:
-                    self.controller.adopt_prefix(req.seq_id, pages)
+                    if tracer is not None:
+                        with tracer.span("adopt_prefix", "serve",
+                                         args={"rid": req.rid,
+                                               "pages": len(pages),
+                                               "tokens": n_tok}):
+                            self.controller.adopt_prefix(req.seq_id, pages)
+                    else:
+                        self.controller.adopt_prefix(req.seq_id, pages)
                     req.prompt_pos = req.prefix_tokens = start = n_tok
             self._set_device_length(slot, start)
             self._zero_slot_state(slot)
+            if obs is not None:
+                # per-request overhead ledger: client/API time is the queue
+                # wait from submit to admission; scheduler/device/persistence
+                # accrue per step, split evenly across the step's batch so
+                # request ledgers sum to the engine's phase totals
+                req.t_admit_ns = time.perf_counter_ns()
+                req.ledger = {
+                    "client_ns": req.t_admit_ns - req.t_submit_ns,
+                    "scheduler_ns": 0, "device_ns": 0, "persistence_ns": 0,
+                    "steps": 0}
             self.active[slot] = req
 
     def step(self) -> None:
+        obs = self.obs
+        tracer = obs.tracer if obs is not None else None
+        if obs is not None:
+            t_step0 = time.perf_counter_ns()
+            persist0 = self.controller.persist_ns
         self._admit()
+        if obs is not None:
+            t_admit1 = time.perf_counter_ns()
         if not self.active:
             return
         B = self.max_batch
@@ -216,8 +268,8 @@ class ServingEngine:
         # step (jax caches one executable per shape: one prefill program,
         # one decode program — still never retraced), so steady-state
         # decode never pays the C-wide compute for 1 valid token
-        C = self.chunk if any(r.in_prefill for r in self.active.values()) \
-            else 1
+        prefill_any = any(r.in_prefill for r in self.active.values())
+        C = self.chunk if prefill_any else 1
         tokens = np.zeros((B, C), np.int32)
         n_new = np.zeros((B,), np.int32)
         feeds: Dict[int, int] = {}
@@ -236,14 +288,15 @@ class ServingEngine:
             # STILL cannot stage its valid tokens finishes the request,
             # flagged truncated, instead of stalling the whole batch
             need = self.controller.pages_needed(req.seq_id, total + take)
-            if self.prefix_cache is not None:
-                # cached-but-idle prefixes yield to live sequences:
-                # release() evicts only pins whose page actually returns
-                # to the pool (idle — not shared with a live sequence),
-                # so it never drains hot shared chains for zero pages
-                free = self.controller.num_free_pages
-                if need > free:
-                    self.prefix_cache.release(need - free)
+            if need > self.controller.num_free_pages:
+                self.backpressure_stalls += 1
+                if self.prefix_cache is not None:
+                    # cached-but-idle prefixes yield to live sequences:
+                    # release() evicts only pins whose page actually returns
+                    # to the pool (idle — not shared with a live sequence),
+                    # so it never drains hot shared chains for zero pages
+                    self.prefix_cache.release(
+                        need - self.controller.num_free_pages)
             if need > self.controller.num_free_pages:
                 req.truncated = True
                 self._finish(slot, req)
@@ -259,10 +312,23 @@ class ServingEngine:
             return
 
         self._sync_page_table()
+        # keep the participants: finished requests leave ``active`` in the
+        # post loop, but the step's shared cost is still theirs to carry
+        part_reqs = [self.active[slot] for slot in feeds]
+        if obs is not None:
+            t_stage1 = time.perf_counter_ns()
         logits, self.caches = self._step_fn(self.params, jnp.asarray(tokens),
                                             self.caches, jnp.asarray(n_new))
+        if obs is not None:
+            # honest device attribution: without the sync the dispatch
+            # returns immediately and device time leaks into the host
+            # sampler below (np.asarray forces the same sync anyway, so
+            # semantics are unchanged)
+            jax.block_until_ready(logits)
+            t_dev1 = time.perf_counter_ns()
         logits = np.asarray(logits)
         self.steps += 1
+        self.tokens_processed += int(sum(feeds.values()))
 
         for slot, take in feeds.items():
             req = self.active[slot]
@@ -275,9 +341,16 @@ class ServingEngine:
                     # the trie so later prompts sharing the prefix adopt
                     # them (idempotent for the pages this request itself
                     # adopted at admission)
-                    self.prefix_cache.insert(
-                        req.prompt,
-                        self.controller.committed_extents(req.seq_id))
+                    if tracer is not None:
+                        with tracer.span("publish", "serve",
+                                         args={"rid": req.rid}):
+                            self.prefix_cache.insert(
+                                req.prompt,
+                                self.controller.committed_extents(req.seq_id))
+                    else:
+                        self.prefix_cache.insert(
+                            req.prompt,
+                            self.controller.committed_extents(req.seq_id))
             # the chunk's last valid position predicts the next token: the
             # final prefill chunk yields the first generated token for free
             tok = self._sample(logits[slot, take - 1], req.sampling)
@@ -289,6 +362,45 @@ class ServingEngine:
                 req.truncated = True        # capacity-bound, not completed
                 self._finish(slot, req)
 
+        if obs is not None:
+            self._account_step(obs, tracer, part_reqs, len(feeds),
+                               t_step0, t_admit1, t_stage1, t_dev1,
+                               persist0,
+                               "prefill" if prefill_any else "decode")
+
+    def _account_step(self, obs: Obs, tracer, part_reqs: List[Request],
+                      n_part: int, t_step0: int, t_admit1: int,
+                      t_stage1: int, t_dev1: int, persist0: int,
+                      phase: str) -> None:
+        """Obs-only epilogue: split the step's wall time into scheduler /
+        device / persistence (SplitFS-style attribution, DESIGN.md §10),
+        charge the phase ledger and each participant's request ledger, emit
+        the step's span family, and tick the windowed profiler."""
+        t_end = time.perf_counter_ns()
+        persist_ns = self.controller.persist_ns - persist0
+        device_ns = t_dev1 - t_stage1
+        sched_ns = max((t_end - t_step0) - device_ns - persist_ns, 0)
+        obs.ledger.add(phase, sched_ns=sched_ns, device_ns=device_ns,
+                       persist_ns=persist_ns, steps=1)
+        for req in part_reqs:
+            led = req.ledger
+            if led is not None:
+                led["scheduler_ns"] += sched_ns // n_part
+                led["device_ns"] += device_ns // n_part
+                led["persistence_ns"] += persist_ns // n_part
+                led["steps"] += 1
+        if tracer is not None:
+            rel = tracer.rel
+            tracer.complete("step", "serve", rel(t_step0), rel(t_end),
+                            args={"phase": phase, "slots": n_part,
+                                  "persist_us": persist_ns / 1e3})
+            tracer.complete("admit", "serve", rel(t_step0), rel(t_admit1))
+            tracer.complete("schedule", "serve", rel(t_admit1), rel(t_stage1))
+            tracer.complete("serve_step", "device", rel(t_stage1),
+                            rel(t_dev1))
+            tracer.complete("sample", "serve", rel(t_dev1), rel(t_end))
+        obs.profiler.observe()
+
     def cancel(self, req: Request) -> None:
         """Abort a queued or in-flight request, releasing its batch slot
         and pages immediately (an abandoned stream must not keep decoding
@@ -297,6 +409,10 @@ class ServingEngine:
         if req.done:
             return
         req.cancelled = True
+        self.cancels += 1
+        if self.obs is not None and self.obs.tracer is not None:
+            self.obs.tracer.instant("cancel", "serve",
+                                    args={"rid": req.rid})
         if req in self.waiting:
             self.waiting.remove(req)
             req.done = True
@@ -307,9 +423,23 @@ class ServingEngine:
     def _finish(self, slot: int, req: Request) -> None:
         req.done = True
         req.stalled = False      # it completed after all: not a timeout
+        if req.truncated:
+            self.truncations += 1
         self.finished.append(req)
         self.controller.free_seq(req.seq_id)
         del self.active[slot]
+        obs = self.obs
+        if obs is not None and obs.tracer is not None and req.ledger:
+            # one request-lifetime span per slot lane, ledger in the args
+            tracer = obs.tracer
+            tracer.complete(
+                f"req{req.rid}", "request", tracer.rel(req.t_admit_ns),
+                tracer.now_ns(), tid=100 + slot,
+                args={"rid": req.rid, "mode": req.mode.name,
+                      "prompt": len(req.prompt), "output": len(req.output),
+                      "prefix_tokens": req.prefix_tokens,
+                      "truncated": req.truncated,
+                      "cancelled": req.cancelled, **req.ledger})
 
     def _sample(self, row: np.ndarray, sp: SamplingParams = GREEDY) -> int:
         """The ONE host sampler: per-request temperature / top-k feed it

@@ -62,11 +62,13 @@ class PrefixCache:
         self._root: Dict[Tuple[int, ...], _Node] = {}
         self._pinned = 0
         self._clock = itertools.count(1)
-        # stats
+        # stats (plain ints; the obs registry reads them lazily)
         self.hits = 0
         self.misses = 0
         self.tokens_saved = 0
         self.pages_evicted = 0
+        self.match_pages_sum = 0             # partial-match depth, summed
+        self.deepest_match = 0               # deepest adoptable match seen
 
     # ---------------------------------------------------------------- match
 
@@ -107,6 +109,8 @@ class PrefixCache:
         if n_tokens:
             self.hits += 1
             self.tokens_saved += n_tokens
+            self.match_pages_sum += len(pages)
+            self.deepest_match = max(self.deepest_match, len(pages))
         else:
             self.misses += 1
         return pages, n_tokens
@@ -226,4 +230,6 @@ class PrefixCache:
         return {"hits": self.hits, "misses": self.misses,
                 "tokens_saved": self.tokens_saved,
                 "pinned_pages": self._pinned,
-                "pages_evicted": self.pages_evicted}
+                "pages_evicted": self.pages_evicted,
+                "match_pages_sum": self.match_pages_sum,
+                "deepest_match": self.deepest_match}

@@ -29,6 +29,39 @@ def qwen():
     return cfg, api, params
 
 
+@pytest.fixture(autouse=True)
+def obs_invariants(monkeypatch):
+    """Every engine in this module runs obs-instrumented (DESIGN.md §10),
+    and teardown audits cancel/free_seq/backpressure-eviction: after
+    cancelling the leftovers and clearing the trie, the slot and page
+    gauges must be back at zero — no scenario may leak pool pages."""
+    from repro.obs import Obs
+
+    engines = []
+    orig_init = ServingEngine.__init__
+
+    def wrapped(self, *args, **kwargs):
+        if kwargs.get("obs") is None:
+            kwargs["obs"] = Obs()
+        orig_init(self, *args, **kwargs)
+        engines.append(self)
+
+    monkeypatch.setattr(ServingEngine, "__init__", wrapped)
+    yield
+    for eng in engines:
+        for req in list(eng.waiting) + list(eng.active.values()):
+            eng.cancel(req)
+        if eng.prefix_cache is not None:
+            eng.prefix_cache.clear()
+        assert not eng.active and not eng.waiting
+        ctrl = eng.controller
+        snap = eng.obs.registry.snapshot()
+        assert snap["engine.slots_active"] == 0
+        assert snap["kv.pages_in_use"] == 0, "leaked pool pages"
+        assert ctrl.pages_in_use == ctrl.pages_allocated - ctrl.pages_freed
+        assert ctrl.num_free_pages == ctrl.geom.num_pages - 1
+
+
 def fresh_oplog():
     device = PMDevice(size=4 * 1024 * 1024)
     return device, OpLog(device, base_block=1, num_blocks=16)

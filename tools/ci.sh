@@ -23,13 +23,17 @@ echo "== dryrun smoke: chunked-prefill serve cell =="
 python -m repro.launch.dryrun --arch qwen2-1.5b --shape decode_32k \
     --serve-chunk 16 --smoke --out runs/ci-dryrun
 echo "== dryrun smoke: session API (mixed modes + prefix cache + arrivals) =="
-python -m repro.launch.dryrun --serve-sessions --smoke --out runs/ci-dryrun
+python -m repro.launch.dryrun --serve-sessions --trace --smoke \
+    --out runs/ci-dryrun
 
 echo "== dist microbench (fast): BENCH_dist.json trajectory =="
 python -m benchmarks.dist_micro --fast --out BENCH_dist.json
 
 echo "== serve microbench (fast): BENCH_serve.json trajectory =="
 python -m benchmarks.serve_micro --fast --out BENCH_serve.json
+
+echo "== obs gate: trace validity + instrumentation overhead bound =="
+python tools/check_obs.py runs/ci-dryrun/serve_trace.json BENCH_serve.json
 
 echo "== arrival microbench (fast): BENCH_arrival.json trajectory =="
 python -m benchmarks.arrival_micro --fast --out BENCH_arrival.json
