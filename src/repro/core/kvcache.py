@@ -204,17 +204,25 @@ class PagedKVCache:
             return max(0, -(-new_len // self.geom.page_tokens) - len(seq.pages))
 
     def append_tokens(self, sid: int, n_tokens: int,
-                      *, reserve: Optional[int] = None) -> Tuple[List[int], int]:
+                      *, reserve: Optional[int] = None,
+                      publish: bool = True) -> Tuple[List[int], int]:
         """Bulk chunk append: reserve staging pages for the ``n_tokens``
         appended (hard — raises on exhaustion) and BEST-EFFORT up to
         ``reserve`` tokens so a fixed-shape chunk's pad positions land in
         allocated staging slots; when the pool can't spare the extra page,
         pads simply route through zero table entries to the null page, so
         the over-reserve is an optimization, never a safety requirement.
-        Advances the length by ``n_tokens`` and COMMITs every newly-full
-        page — one metadata publish (+ one 64 B oplog entry in STRICT mode)
-        per page.  With chunk == page_tokens a full prefill chunk is
-        exactly one publish (the chunk/page invariant, DESIGN.md §3.4).
+        Advances the length by ``n_tokens`` and (with ``publish=True``)
+        COMMITs every newly-full page — one metadata publish (+ one 64 B
+        oplog entry in STRICT mode) per page.  With chunk == page_tokens a
+        full prefill chunk is exactly one publish (the chunk/page
+        invariant, DESIGN.md §3.4).
+
+        ``publish=False`` STAGES the tokens without committing — the
+        speculative-decode lane: provisional tokens live in staging pages
+        only (the SPFS fast-tier absorb), and the caller publishes the
+        verified prefix afterwards via ``commit(sid, upto_len=...)``, so a
+        crash mid-speculation can never replay an unverified extent.
         Returns (newly-allocated page ids, pages published)."""
         g = self.geom
         with self._lock:
@@ -235,7 +243,7 @@ class PagedKVCache:
             self.pad_fallbacks += desired - len(seq.pages)
             seq.length = new_len
             self._seq_lens[sid] = new_len
-            return added, self._commit_locked(seq)
+            return added, (self._commit_locked(seq) if publish else 0)
 
     def advance(self, sid: int, n_tokens: int = 1) -> None:
         """Record that n tokens were appended (the device scatter happened
@@ -246,14 +254,19 @@ class PagedKVCache:
             self._seq_lens[sid] = seq.length
             self._commit_locked(seq)
 
-    def commit(self, sid: int) -> int:
+    def commit(self, sid: int, *, upto_len: Optional[int] = None) -> int:
         """Publish every newly-full page of ``sid`` (relink: metadata-only;
-        no data moves).  Returns the number of pages published."""
+        no data moves).  ``upto_len`` bounds the publish to pages wholly
+        inside the first ``upto_len`` tokens — the speculative-decode
+        verify step publishes exactly the ACCEPTED extent this way, before
+        rolling the rejected tail back.  Returns pages published."""
         with self._lock:
-            return self._commit_locked(self._seqs[sid])
+            return self._commit_locked(self._seqs[sid], upto_len)
 
-    def _commit_locked(self, seq: _Seq) -> int:
-        full = seq.length // self.geom.page_tokens
+    def _commit_locked(self, seq: _Seq, upto_len: Optional[int] = None,
+                       ) -> int:
+        n_tok = seq.length if upto_len is None else min(seq.length, upto_len)
+        full = n_tok // self.geom.page_tokens
         n = full - seq.committed_pages
         if n <= 0:
             return 0
@@ -399,34 +412,51 @@ class PagedKVCache:
         shared: if so, allocate a private copy and return (src_page,
         dst_page) so the engine can schedule the device-side page copy.
         Returns None when no copy is needed (the common case)."""
-        g = self.geom
         with self._lock:
-            seq = self._seqs[sid]
-            tail_idx = seq.length // g.page_tokens
-            if seq.length % g.page_tokens == 0:
-                return None  # next token starts a fresh page
-            if tail_idx >= len(seq.pages):
-                return None
-            tail = seq.pages[tail_idx]
-            if self._refcount[tail] == 1:
-                return None
-            new = self._alloc_page()
-            self._release_page(tail)
-            seq.pages[tail_idx] = new
-            self._page_table[sid, tail_idx] = new
-            self.pages_copied += 1
-            return (tail, new)
+            return self._cow_tail_locked(self._seqs[sid])
+
+    def _cow_tail_locked(self, seq: _Seq) -> Optional[tuple[int, int]]:
+        """CoW the tail page when it is PARTIAL and SHARED (refcount > 1:
+        fork-shared, trie-adopted, or cache-pinned): the next append would
+        otherwise scatter through the shared physical page.  Returns the
+        (src, dst) pair for the device-side copy, or None."""
+        g = self.geom
+        tail_idx = seq.length // g.page_tokens
+        if seq.length % g.page_tokens == 0:
+            return None  # next token starts a fresh page
+        if tail_idx >= len(seq.pages):
+            return None
+        tail = seq.pages[tail_idx]
+        if self._refcount[tail] == 1:
+            return None
+        new = self._alloc_page()
+        self._release_page(tail)
+        seq.pages[tail_idx] = new
+        self._page_table[seq.sid, tail_idx] = new
+        self.pages_copied += 1
+        return (tail, new)
 
     # ------------------------------------------------------------- rollback (spec. decode)
 
-    def rollback(self, sid: int, new_len: int) -> None:
+    def rollback(self, sid: int, new_len: int) -> Optional[tuple[int, int]]:
         """Speculative-decode rejection: shrink to new_len. Metadata-only —
         pages past the new tail are released, no data moves (the truncate-
-        via-relink analogue)."""
+        via-relink analogue).
+
+        Two extra duties beyond the shrink:
+          * STRICT sequences log an ``OP_TRUNCATE`` tombstone on ANY
+            shrink, so crash replay reconstructs exactly the accepted
+            extent even when sids/pages are later reused;
+          * a kept-but-partial tail page that is SHARED (trie-adopted,
+            pinned, or fork-shared) is CoW'd here — the re-append after a
+            rollback must never write through a shared page.  Returns the
+            (src, dst) page pair for the device-side copy (None when no
+            copy was needed)."""
         g = self.geom
         with self._lock:
             seq = self._seqs[sid]
             assert new_len <= seq.length
+            shrank = new_len < seq.length
             keep = -(-new_len // g.page_tokens) if new_len else 0
             for p in seq.pages[keep:]:
                 self._release_page(p)
@@ -436,10 +466,11 @@ class PagedKVCache:
             # committed == published FULL pages: a kept-but-now-partial tail
             # page drops back to staging and is recommitted when it refills
             full = new_len // g.page_tokens
-            if full < seq.committed_pages:
+            if shrank:
                 self._log_ctl(seq, OP_TRUNCATE, full)
             seq.committed_pages = min(seq.committed_pages, full)
             self._seq_lens[sid] = new_len
+            return self._cow_tail_locked(seq)
 
     # ------------------------------------------------------------- device mirrors
 

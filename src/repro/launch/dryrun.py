@@ -326,7 +326,7 @@ def smoke_serve_sessions(arch: str, out_dir: Path, *,
     from ..core.oplog import OpLog
     from ..models.spec import init_params
     from ..obs import Obs, validate_chrome_trace
-    from ..serve import ArrivalSpec, OpenLoopDriver, ServeClient
+    from ..serve import ArrivalSpec, OpenLoopDriver, ServeClient, SpecConfig
 
     cfg = get_config(arch, smoke=True)
     api = build_model(cfg)
@@ -347,10 +347,23 @@ def smoke_serve_sessions(arch: str, out_dir: Path, *,
     result = OpenLoopDriver(client, session=posix).run(workload)
     ok = (len(client.engine.finished) == len(workload)
           and all(r.t_done is not None for r in result.records))
+    # speculative-decoding session: a repetitive prompt the n-gram
+    # drafter can always hit, so the draft/verify/rollback span taxonomy
+    # deterministically lands in the CI trace artifact
+    spec_sess = client.open_session(spec=SpecConfig(k=3))
+    spec_out = list(spec_sess.generate(([7, 8, 9] * 6)[:16],
+                                       max_new_tokens=6))
+    spec_ok = (len(spec_out) == 6
+               and client.engine.spec_drafted_tokens > 0)
+    ok = ok and spec_ok
     record = {"cell": "serve_sessions", "arch": arch,
               "status": "ok" if ok else "failed",
               "requests": len(result.records),
               "percentiles": result.percentiles(),
+              "spec": {"tokens_out": len(spec_out),
+                       "steps": client.engine.spec_steps,
+                       "drafted": client.engine.spec_drafted_tokens,
+                       "accepted": client.engine.spec_accepted_tokens},
               "stats": {k: v for k, v in result.stats.items()
                         if k != "utilization"}}
     out_dir.mkdir(parents=True, exist_ok=True)

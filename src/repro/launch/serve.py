@@ -26,7 +26,7 @@ from ..core.oplog import OpLog
 from ..models import build_model
 from ..models.spec import init_params
 from ..obs import Obs
-from ..serve import ArrivalSpec, OpenLoopDriver, ServeClient
+from ..serve import ArrivalSpec, OpenLoopDriver, ServeClient, SpecConfig
 from ..serve.arrival import poisson_schedule
 
 
@@ -58,6 +58,10 @@ def main() -> None:
                          "requests round-robin across the sessions")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft up to K tokens per "
+                         "decode step via n-gram prompt lookup (0 = off; "
+                         "greedy sessions only)")
     ap.add_argument("--shared-prefix", type=float, default=0.0,
                     help="fraction of each prompt drawn from a common "
                          "prefix (exercises prefix-cache admission)")
@@ -88,8 +92,10 @@ def main() -> None:
                          chunk_tokens=args.chunk_tokens or None,
                          oplog=oplog, prefix_cache=not args.no_prefix_cache,
                          obs=obs)
+    spec = SpecConfig(k=args.spec_k) if args.spec_k > 0 else None
     sessions = [client.open_session(mode=m, temperature=args.temperature,
-                                    top_k=args.top_k) for m in modes]
+                                    top_k=args.top_k, spec=spec)
+                for m in modes]
     rng = np.random.default_rng(args.seed)
     prompts = make_prompts(rng, cfg.vocab, args.requests, args.shared_prefix)
 
@@ -133,6 +139,13 @@ def main() -> None:
             print(f"[serve] open-loop @{args.rate}rps: "
                   f"TTFT p50={ttft['p50']*1e3:.0f}ms "
                   f"p99={ttft['p99']*1e3:.0f}ms{tail}")
+    if engine.spec_steps:
+        drafted = engine.spec_drafted_tokens
+        acc = engine.spec_accepted_tokens
+        print(f"[serve] speculation: {engine.spec_steps} spec steps, "
+              f"{drafted} drafted, {acc} accepted "
+              f"({acc / drafted:.0%} accept rate), "
+              f"{engine.spec_rollbacks} rollbacks")
     stalled = [r for r in engine.waiting + list(engine.active.values())
                if r.stalled]
     if stalled:

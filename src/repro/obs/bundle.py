@@ -146,6 +146,23 @@ def attach_serving(obs: Obs, engine) -> None:
     reg.register("engine.slot_occupancy",
                  lambda: len(engine.active) / engine.max_batch)
 
+    # speculative decoding: accept rate = accepted / drafted; draft_ns is
+    # the host drafting time the ledger charges to the CLIENT bucket
+    reg.register("spec.steps", lambda: engine.spec_steps, monotonic=True)
+    reg.register("spec.drafted_tokens", lambda: engine.spec_drafted_tokens,
+                 monotonic=True)
+    reg.register("spec.accepted_tokens", lambda: engine.spec_accepted_tokens,
+                 monotonic=True)
+    reg.register("spec.rejected_tokens", lambda: engine.spec_rejected_tokens,
+                 monotonic=True)
+    reg.register("spec.rollbacks", lambda: engine.spec_rollbacks,
+                 monotonic=True)
+    reg.register("spec.draft_ns", lambda: engine.draft_ns, monotonic=True)
+    reg.register("spec.accept_rate",
+                 lambda: (engine.spec_accepted_tokens
+                          / engine.spec_drafted_tokens
+                          if engine.spec_drafted_tokens else 0.0))
+
     reg.register("kv.pages_allocated", lambda: ctrl.pages_allocated,
                  monotonic=True)
     reg.register("kv.pages_freed", lambda: ctrl.pages_freed, monotonic=True)

@@ -8,5 +8,5 @@ prefixes at admission; ``arrival`` drives open-loop traffic.
 from .api import ServeClient, Session
 from .arrival import (ArrivalResult, ArrivalSpec, OpenLoopDriver,
                       poisson_schedule, trace_schedule)
-from .engine import Request, SamplingParams, ServingEngine
+from .engine import Request, SamplingParams, ServingEngine, SpecConfig
 from .prefix_cache import PrefixCache

@@ -31,19 +31,24 @@ from ..core.modes import Mode
 from ..core.oplog import OpLog
 from ..models.registry import ModelAPI
 from ..obs import Obs
-from .engine import Request, SamplingParams, ServingEngine
+from .engine import Request, SamplingParams, ServingEngine, SpecConfig
 
 
 class Session:
     """One application's handle onto the shared engine: a consistency mode
-    plus default sampling parameters, both overridable per call."""
+    plus default sampling parameters and speculative-decode config, all
+    overridable per call.  ``spec`` follows the same per-application split
+    as the mode: a session that opts into speculation drafts and verifies
+    over the rollback path while its neighbors run plain decode."""
 
     def __init__(self, client: "ServeClient", session_id: int, mode: Mode,
-                 sampling: SamplingParams) -> None:
+                 sampling: SamplingParams,
+                 spec: Optional[SpecConfig] = None) -> None:
         self.client = client
         self.session_id = session_id
         self.mode = mode
         self.sampling = sampling
+        self.spec = spec
         self.requests: List[Request] = []
         self.closed = False
 
@@ -51,7 +56,8 @@ class Session:
 
     def submit(self, prompt: List[int], max_new_tokens: int = 16, *,
                temperature: Optional[float] = None,
-               top_k: Optional[int] = None) -> Request:
+               top_k: Optional[int] = None,
+               spec: Optional[SpecConfig] = None) -> Request:
         """Queue a request under this session's mode; the engine must be
         pumped (``client.step`` / ``run_until_done`` or any session's
         generator) for it to make progress."""
@@ -59,13 +65,15 @@ class Session:
             raise RuntimeError("session is closed")
         req = self.client.engine.submit(
             list(prompt), max_new_tokens, mode=self.mode,
-            sampling=self._sampling(temperature, top_k))
+            sampling=self._sampling(temperature, top_k),
+            spec=self.spec if spec is None else spec)
         self.requests.append(req)
         return req
 
     def generate(self, prompt: List[int], max_new_tokens: int = 16, *,
                  temperature: Optional[float] = None,
                  top_k: Optional[int] = None,
+                 spec: Optional[SpecConfig] = None,
                  max_steps: int = 100000) -> Iterator[int]:
         """Stream generated token ids.  Driving this generator steps the
         SHARED engine, so other sessions' requests advance too.  On a
@@ -73,7 +81,7 @@ class Session:
         stream ends (callers distinguish timeout from completion via the
         request, available as ``session.requests[-1]``)."""
         req = self.submit(prompt, max_new_tokens,
-                          temperature=temperature, top_k=top_k)
+                          temperature=temperature, top_k=top_k, spec=spec)
         emitted = 0
         steps0 = self.client.engine.steps
         timed_out = False
@@ -163,14 +171,18 @@ class ServeClient:
         self.sessions: Dict[int, Session] = {}
 
     def open_session(self, mode: Optional[Mode] = None, *,
-                     temperature: float = 0.0, top_k: int = 0) -> Session:
+                     temperature: float = 0.0, top_k: int = 0,
+                     spec: Optional[SpecConfig] = None) -> Session:
         """A new session in consistency mode ``mode`` (default: the
         client's default mode).  Sessions with different modes coexist on
-        the one engine; only STRICT sessions pay oplog publishes."""
+        the one engine; only STRICT sessions pay oplog publishes.  Pass
+        ``spec=SpecConfig(...)`` to speculatively decode this session's
+        requests (greedy only; ignored for recurrent-state models)."""
         sid = next(self._sids)
         sess = Session(self, sid,
                        self.engine.controller.mode if mode is None else mode,
-                       SamplingParams(temperature=temperature, top_k=top_k))
+                       SamplingParams(temperature=temperature, top_k=top_k),
+                       spec=spec)
         self.sessions[sid] = sess
         return sess
 

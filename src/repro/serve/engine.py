@@ -43,7 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.kvcache import PagedKVCache
+from ..core.kvcache import KVPoolFullError, PagedKVCache
 from ..core.modes import Mode
 from ..core.oplog import OpLog
 from ..models.registry import ModelAPI
@@ -65,6 +65,27 @@ class SamplingParams:
 
 GREEDY = SamplingParams()
 
+
+@dataclass(frozen=True)
+class SpecConfig:
+    """Per-session speculative decoding (DESIGN.md §8): an n-gram
+    prompt-lookup drafter proposes up to ``k`` tokens per decode step;
+    the engine stages them through the SAME fixed-shape chunk lane
+    prefill uses, verifies all of them against the target logits in ONE
+    step, keeps the longest agreeing prefix and ``rollback``s the rest
+    (metadata-only, relink-style).  Greedy-only: a stochastic sampler
+    has no stable notion of draft/target agreement, so non-greedy
+    requests silently run unspeculated."""
+    k: int = 4          # max drafted tokens per step (clamped to C - 1)
+    ngram_max: int = 3  # longest suffix n-gram the drafter matches
+    ngram_min: int = 1
+
+    def __post_init__(self) -> None:
+        if self.k < 1:
+            raise ValueError("spec k must be >= 1")
+        if not 1 <= self.ngram_min <= self.ngram_max:
+            raise ValueError("need 1 <= ngram_min <= ngram_max")
+
 # cache sub-dict keys that hold recurrent/SSM state (vs paged KV pools).
 # ONE source of truth: the slot-state walks, the recurrent-arch guard for
 # the prefix cache, and the fork page copy all consult this set — adding a
@@ -84,6 +105,9 @@ class Request:
     seq_id: Optional[int] = None
     prompt_pos: int = 0                  # per-slot chunk cursor
     prefix_tokens: int = 0               # prompt tokens adopted from the cache
+    spec: Optional[SpecConfig] = None    # speculative decode (None = off)
+    spec_drafted: int = 0                # drafted tokens (this request)
+    spec_accepted: int = 0               # drafts the target model agreed with
     done: bool = False
     truncated: bool = False              # finished early (pool backpressure)
     stalled: bool = False                # run_until_done hit max_steps first
@@ -108,6 +132,7 @@ class ServingEngine:
                  seed: int = 0, mode: Mode = Mode.POSIX,
                  oplog: Optional[OpLog] = None,
                  prefix_cache: "bool | PrefixCache | None" = None,
+                 spec: Optional[SpecConfig] = None,
                  obs: Optional[Obs] = None) -> None:
         self.api = api
         self.params = params
@@ -132,11 +157,18 @@ class ServingEngine:
         # state (conv/h/ssd leaves) cannot reuse KV pages without also
         # replaying the recurrent scan, so the cache is refused for them —
         # attaching would silently skip state updates for the shared span.
-        if prefix_cache and self._has_recurrent_state():
+        self._recurrent = self._has_recurrent_state()
+        if prefix_cache and self._recurrent:
             prefix_cache = None
         self.prefix_cache: Optional[PrefixCache] = (
             PrefixCache(self.controller) if prefix_cache is True
             else prefix_cache or None)
+        # speculative decoding default (requests override per-submit).
+        # Refused for recurrent-state models for the same reason as the
+        # prefix cache: rollback can rewind paged KV (metadata-only) but
+        # NOT carried conv/h/ssd state, so a rejected draft would leave
+        # the recurrent state advanced past the accepted extent.
+        self.default_spec = None if self._recurrent else spec
         # hard per-slot token cap: the fixed-shape step addresses positions
         # up to lengths + C - 1, which must stay inside the page-table row
         self._cap = min(max_seq - 1, geom.max_tokens_per_seq - self.chunk)
@@ -153,6 +185,13 @@ class ServingEngine:
         self.truncations = 0
         self.cancels = 0
         self.backpressure_stalls = 0
+        # speculative-decode counters (accept rate = accepted / drafted)
+        self.spec_steps = 0             # steps that carried >=1 draft
+        self.spec_drafted_tokens = 0
+        self.spec_accepted_tokens = 0
+        self.spec_rejected_tokens = 0
+        self.spec_rollbacks = 0         # rollbacks that actually shrank
+        self.draft_ns = 0               # host drafting time (client bucket)
         self.obs = obs
         if obs is not None:
             attach_serving(obs, self)
@@ -161,7 +200,8 @@ class ServingEngine:
 
     def submit(self, prompt: List[int], max_new_tokens: int = 16, *,
                mode: Optional[Mode] = None,
-               sampling: Optional[SamplingParams] = None) -> Request:
+               sampling: Optional[SamplingParams] = None,
+               spec: Optional[SpecConfig] = None) -> Request:
         if not prompt:
             raise ValueError("empty prompt")
         # statically infeasible prompts are rejected here; prompts that fit
@@ -181,10 +221,15 @@ class ServingEngine:
             raise ValueError(
                 f"prompt of {len(prompt)} tokens exceeds the per-slot "
                 f"capacity of {limit} (pool geometry / window bound)")
+        samp = self.default_sampling if sampling is None else sampling
+        eff_spec = spec if spec is not None else self.default_spec
+        if eff_spec is not None and (
+                self._recurrent                       # can't rewind state
+                or not (samp.temperature <= 0.0 or samp.top_k == 1)):
+            eff_spec = None      # greedy-only (see SpecConfig docstring)
         req = Request(next(self._rid), list(prompt), max_new_tokens,
                       mode=self.controller.mode if mode is None else mode,
-                      sampling=self.default_sampling if sampling is None
-                      else sampling)
+                      sampling=samp, spec=eff_spec)
         if self.obs is not None:
             req.t_submit_ns = time.perf_counter_ns()
             if self.obs.tracer is not None:
@@ -269,18 +314,70 @@ class ServingEngine:
         # one decode program — still never retraced), so steady-state
         # decode never pays the C-wide compute for 1 valid token
         prefill_any = any(r.in_prefill for r in self.active.values())
-        C = self.chunk if prefill_any else 1
+        # drafting pass (host-side prompt lookup) runs BEFORE the width
+        # choice: speculative tokens ride the same chunk lane prefill
+        # uses, so a step with drafts runs the C-wide program.  Draft
+        # time lands in the CLIENT bucket of the overhead split — it is
+        # guesswork spent on the model's behalf, not engine scheduling.
+        drafts: Dict[int, List[int]] = {}
+        draft_ns = 0
+        if any(r.spec is not None for r in self.active.values()):
+            t_draft0 = time.perf_counter_ns()
+            for slot, req in self.active.items():
+                sp = req.spec
+                if sp is None or req.in_prefill or not req.output:
+                    continue
+                total = self.controller.seq_length(req.seq_id)
+                # width-aware clamp: the feed is 1 + k tokens, and the
+                # NEXT step's 1-token append must still fit under _cap
+                k = min(sp.k, self.chunk - 1,
+                        self._cap - total - 1,
+                        req.max_new_tokens - len(req.output) - 1)
+                if k >= 1:
+                    d = self._draft(req, k)
+                    if d:
+                        drafts[slot] = d
+            t_draft1 = time.perf_counter_ns()
+            draft_ns = t_draft1 - t_draft0
+            self.draft_ns += draft_ns
+            if tracer is not None:
+                tracer.complete(
+                    "draft", "serve", tracer.rel(t_draft0),
+                    tracer.rel(t_draft1),
+                    args={"slots": len(drafts),
+                          "tokens": sum(map(len, drafts.values()))})
+        C = self.chunk if (prefill_any or drafts) else 1
         tokens = np.zeros((B, C), np.int32)
         n_new = np.zeros((B,), np.int32)
         feeds: Dict[int, int] = {}
+        spec_feeds: Dict[int, List[int]] = {}    # slot -> drafts actually fed
         for slot, req in list(self.active.items()):
             total = self.controller.seq_length(req.seq_id)
             if req.in_prefill:
+                # prompts are bounded at submit; prefill may stage up to
+                # that limit regardless of the decode cap below
                 take = min(C, len(req.prompt) - req.prompt_pos)
                 feed = req.prompt[req.prompt_pos:req.prompt_pos + take]
             else:
-                take = 1
-                feed = [req.output[-1]]
+                # width-aware overflow guard (was `total >= _cap` checked
+                # AFTER the append — correct only for 1 token per step):
+                # a decode/speculative append of ``take`` tokens must keep
+                # total + take <= _cap, or the fixed-shape step addresses
+                # past the page-table row / length capacity
+                room = self._cap - total
+                if room <= 0:
+                    req.truncated = True    # capacity-bound, not completed
+                    self._finish(slot, req)
+                    continue
+                if slot in drafts:
+                    d = drafts[slot][:max(min(room - 1, C - 1), 0)]
+                    feed = [req.output[-1]] + d
+                    take = len(feed)
+                    if d:
+                        spec_feeds[slot] = d
+                else:
+                    take = 1
+                    feed = [req.output[-1]]
             # backpressure: only the VALID tokens need pages (pad positions
             # fall back to the null page when the over-reserve can't be
             # had).  Cached-but-idle prefix pins are evicted first — live
@@ -304,10 +401,31 @@ class ServingEngine:
             tokens[slot, :take] = feed
             n_new[slot] = take
             feeds[slot] = take
+            # CoW guard: after a rollback (or a fork/adopt) the kept tail
+            # page may still be shared — an append must never write
+            # through a shared page (rollback CoWs its own kept tail, so
+            # this is belt-and-braces; it is O(1) metadata)
+            try:
+                cow = self.controller.prepare_append(req.seq_id, take)
+            except KVPoolFullError:
+                req.truncated = True
+                self._finish(slot, req)
+                del feeds[slot]
+                spec_feeds.pop(slot, None)
+                n_new[slot] = 0
+                tokens[slot, :] = 0
+                continue
+            if cow is not None:
+                self._copy_page_on_device(*cow)
             # metadata: reserve the FULL chunk's staging slots (pad tokens
             # land in allocated-but-unpublished slots), advance by the valid
-            # count, publish (commit + oplog) every page the chunk filled
-            self.controller.append_tokens(req.seq_id, take, reserve=C)
+            # count, publish (commit + oplog) every page the chunk filled.
+            # Speculative feeds STAGE instead (publish=False): their pages
+            # are published only for the verified prefix, by the epilogue's
+            # commit(upto_len) — so a crash mid-speculation can never replay
+            # an unverified extent (DESIGN.md §8)
+            self.controller.append_tokens(req.seq_id, take, reserve=C,
+                                          publish=slot not in spec_feeds)
         if not feeds:
             return
 
@@ -351,10 +469,18 @@ class ServingEngine:
                         self.prefix_cache.insert(
                             req.prompt,
                             self.controller.committed_extents(req.seq_id))
-            # the chunk's last valid position predicts the next token: the
-            # final prefill chunk yields the first generated token for free
-            tok = self._sample(logits[slot, take - 1], req.sampling)
-            req.output.append(tok)
+            if slot in spec_feeds:
+                # draft-and-verify epilogue: all take logits came back
+                # from ONE step; accept the longest agreeing prefix and
+                # roll back the rejected tail (metadata-only)
+                self._verify_spec(slot, req, take, spec_feeds[slot],
+                                  logits, tracer)
+            else:
+                # the chunk's last valid position predicts the next
+                # token: the final prefill chunk yields the first
+                # generated token for free
+                tok = self._sample(logits[slot, take - 1], req.sampling)
+                req.output.append(tok)
             total = self.controller.seq_length(req.seq_id)
             if len(req.output) >= req.max_new_tokens:
                 self._finish(slot, req)
@@ -365,29 +491,93 @@ class ServingEngine:
         if obs is not None:
             self._account_step(obs, tracer, part_reqs, len(feeds),
                                t_step0, t_admit1, t_stage1, t_dev1,
-                               persist0,
+                               persist0, draft_ns,
                                "prefill" if prefill_any else "decode")
+
+    def _verify_spec(self, slot: int, req: Request, take: int,
+                     d: List[int], logits: np.ndarray, tracer) -> None:
+        """Accept the longest draft prefix the target model agrees with.
+
+        The step fed ``[output[-1]] + d`` (take = 1 + len(d) positions),
+        so position i's logits predict the token AFTER the i-th fed
+        token: sample each in turn, stop at the first disagreement —
+        every sampled token up to and including that position is a real
+        model output (the token after the last accepted draft comes free,
+        exactly like the final prefill chunk's bonus token).
+
+        KV protocol (DESIGN.md §8): the append above STAGED all ``take``
+        positions (no publish).  ``commit(upto_len=target)`` publishes
+        exactly the accepted full pages (STRICT: OP_KV_COMMIT), THEN
+        ``rollback(target)`` drops the rejected tail and logs an
+        OP_TRUNCATE tombstone on any shrink — in that order, so a crash
+        at ANY point replays to exactly the accepted extent.  Rollback
+        also CoWs a kept-but-shared tail page; the engine applies the
+        device-side copy here."""
+        if tracer is not None:
+            t_v0 = time.perf_counter_ns()
+        new_toks: List[int] = []
+        for i in range(take):
+            tok = self._sample(logits[slot, i], req.sampling)
+            new_toks.append(tok)
+            if i < take - 1 and d[i] != tok:
+                break
+        accepted = len(new_toks) - 1          # drafts the model agreed with
+        emit = new_toks[:req.max_new_tokens - len(req.output)]
+        req.output.extend(emit)
+        req.spec_drafted += len(d)
+        req.spec_accepted += accepted
+        self.spec_steps += 1
+        self.spec_drafted_tokens += len(d)
+        self.spec_accepted_tokens += accepted
+        self.spec_rejected_tokens += len(d) - accepted
+        if tracer is not None:
+            t_v1 = time.perf_counter_ns()
+            tracer.complete("verify", "serve", tracer.rel(t_v0),
+                            tracer.rel(t_v1),
+                            args={"rid": req.rid, "drafted": len(d),
+                                  "accepted": accepted})
+        # the KV invariant (prompt + output[:-1] staged) pins the target:
+        # the last emitted token is NEXT step's feed, so its KV position
+        # does not exist yet — exactly like normal decode
+        total_after = self.controller.seq_length(req.seq_id)
+        target = (total_after - take) + len(emit)
+        if target < total_after:
+            self.spec_rollbacks += 1
+        self.controller.commit(req.seq_id, upto_len=target)
+        cowed = self._rollback_to(req, target)
+        if tracer is not None:
+            tracer.complete("rollback", "serve", tracer.rel(t_v1),
+                            tracer.now_ns(),
+                            args={"rid": req.rid,
+                                  "rejected": total_after - target,
+                                  "cow": cowed})
 
     def _account_step(self, obs: Obs, tracer, part_reqs: List[Request],
                       n_part: int, t_step0: int, t_admit1: int,
                       t_stage1: int, t_dev1: int, persist0: int,
-                      phase: str) -> None:
+                      draft_ns: int, phase: str) -> None:
         """Obs-only epilogue: split the step's wall time into scheduler /
         device / persistence (SplitFS-style attribution, DESIGN.md §10),
         charge the phase ledger and each participant's request ledger, emit
-        the step's span family, and tick the windowed profiler."""
+        the step's span family, and tick the windowed profiler.  Drafting
+        time is CLIENT time (guesswork outside the engine's control
+        plane), subtracted from the scheduler bucket."""
         t_end = time.perf_counter_ns()
         persist_ns = self.controller.persist_ns - persist0
         device_ns = t_dev1 - t_stage1
-        sched_ns = max((t_end - t_step0) - device_ns - persist_ns, 0)
+        sched_ns = max((t_end - t_step0) - device_ns - persist_ns
+                       - draft_ns, 0)
         obs.ledger.add(phase, sched_ns=sched_ns, device_ns=device_ns,
                        persist_ns=persist_ns, steps=1)
+        if draft_ns:
+            obs.ledger.add_client(draft_ns)
         for req in part_reqs:
             led = req.ledger
             if led is not None:
                 led["scheduler_ns"] += sched_ns // n_part
                 led["device_ns"] += device_ns // n_part
                 led["persistence_ns"] += persist_ns // n_part
+                led["client_ns"] += draft_ns // n_part
                 led["steps"] += 1
         if tracer is not None:
             rel = tracer.rel
@@ -438,22 +628,73 @@ class ServingEngine:
                 args={"rid": req.rid, "mode": req.mode.name,
                       "prompt": len(req.prompt), "output": len(req.output),
                       "prefix_tokens": req.prefix_tokens,
+                      "spec_drafted": req.spec_drafted,
+                      "spec_accepted": req.spec_accepted,
                       "truncated": req.truncated,
                       "cancelled": req.cancelled, **req.ledger})
 
     def _sample(self, row: np.ndarray, sp: SamplingParams = GREEDY) -> int:
         """The ONE host sampler: per-request temperature / top-k feed it
-        parameters, but every request's logits go through this path."""
+        parameters, but every request's logits go through this path.
+
+        Tie-break contract: LOWEST token id wins every tie.  Greedy relies
+        on np.argmax returning the first maximal index; top-k truncation
+        uses a stable descending sort so a tie straddling the k-th place
+        keeps exactly k candidates (the lowest-id ones) rather than
+        admitting every tied logit (the old partition-threshold behavior,
+        which made verify-vs-draft agreement depend on memory order)."""
         if sp.temperature <= 0.0 or sp.top_k == 1:
-            return int(row.argmax())
+            return int(row.argmax())     # first (lowest-id) maximal entry
         z = row.astype(np.float64) / sp.temperature
         if sp.top_k and sp.top_k < len(row):
-            kth = np.partition(z, -sp.top_k)[-sp.top_k]
-            z = np.where(z >= kth, z, -np.inf)
+            keep = np.argsort(-z, kind="stable")[:sp.top_k]
+            mask = np.full_like(z, -np.inf)
+            mask[keep] = z[keep]
+            z = mask
         z -= z.max()
         p = np.exp(z)
         p /= p.sum()
         return int(self.rng.choice(len(row), p=p))
+
+    # ------------------------------------------------------------------ speculation plumbing
+
+    def _draft(self, req: Request, k: int) -> List[int]:
+        """Prompt-lookup drafter: find the most recent earlier occurrence
+        of the context's longest suffix n-gram (length ngram_max down to
+        ngram_min) and propose up to k tokens that followed it.  Pure
+        host-side guesswork — no model, no device."""
+        ctx = req.prompt + req.output
+        sp = req.spec
+        for n in range(min(sp.ngram_max, len(ctx) - 1),
+                       sp.ngram_min - 1, -1):
+            pat = ctx[-n:]
+            for i in range(len(ctx) - n - 1, -1, -1):
+                if ctx[i:i + n] != pat:
+                    continue
+                cont = ctx[i + n:i + n + k]
+                if len(cont) < k:
+                    # the match runs into the live tail: the span from
+                    # i+n to the end repeats with period p, so extend
+                    # the draft by cycling it — a token stuck on
+                    # ...x,x,x drafts [x]*k, a looping a,b,c drafts
+                    # whole periods instead of a truncated stub
+                    p = len(ctx) - (i + n)
+                    cont = [ctx[i + n + (j % p)] for j in range(k)]
+                return cont
+        return []
+
+    def _rollback_to(self, req: Request, target: int) -> bool:
+        """Shrink a live request's KV to ``target`` tokens: controller
+        rollback (OP_TRUNCATE tombstone on shrink + CoW of a kept-but-
+        shared tail page) plus the device-side page copy and length
+        mirror.  The page-table mirror refreshes at the next step's
+        ``_sync_page_table`` — no device compute reads it in between.
+        Returns True when the kept tail page was CoW'd."""
+        cow = self.controller.rollback(req.seq_id, target)
+        if cow is not None:
+            self._copy_page_on_device(*cow)
+        self._set_device_length(req.slot, target)
+        return cow is not None
 
     # ------------------------------------------------------------------ device mirrors
 
@@ -537,7 +778,7 @@ class ServingEngine:
             raise RuntimeError("no free slot for fork")
         slot = free_slots[0]
         child = Request(next(self._rid), list(req.prompt), req.max_new_tokens,
-                        mode=req.mode, sampling=req.sampling)
+                        mode=req.mode, sampling=req.sampling, spec=req.spec)
         child.output = list(req.output)
         child.prompt_pos = req.prompt_pos
         child.prefix_tokens = req.prefix_tokens

@@ -2,8 +2,13 @@
 
 The built step is the unified chunked program
 ``serve_step(params, tokens [B, C], caches, n_new [B])`` — prefill chunks,
-decode (n_new=1) and mixed batches are ONE compiled fixed shape
-(DESIGN.md §8).
+decode (n_new=1), SPECULATIVE decode (n_new = 1 + k drafted tokens riding
+the same C-wide chunk lane; the engine verifies all k logits from the one
+step and rolls back the rejected tail) and mixed batches are ONE compiled
+fixed shape (DESIGN.md §8).  Nothing below the engine distinguishes a
+drafted token from a prompt token: both are "n_new valid positions of a
+C-wide chunk", which is why speculation needs no kernel or distribution
+changes here.
 
 Two distribution strategies (the paper's data plane at scale):
 

@@ -236,3 +236,87 @@ def _relink_and_check(src_bytes, src_off, dst_off, size):
     crashed = device.torn_copy(np.random.default_rng(5), 0)
     s2 = recovered_store(crashed, Mode.SYNC)
     assert s2.read_file("dst")[dst_off: dst_off + size] == expect
+
+
+# --------------------------------------------- KV crash-mid-speculation
+
+# The serving-plane analogue of the torn-log properties above: STRICT
+# speculative decoding STAGES draft tokens (append publish=False), then
+# publishes exactly the accepted extent (commit(upto_len) -> OP_KV_COMMIT
+# per page) and THEN tombstones the rejection (rollback -> OP_TRUNCATE).
+# A crash at ANY oplog prefix — including between the accepted commit and
+# the truncate — must replay to a prefix of some ACCEPTED extent, never
+# an unverified draft page.
+
+
+def _drive_spec_rounds(seed, n_rounds):
+    """Run speculative append -> commit(accepted) -> rollback rounds on a
+    STRICT sequence, recording (oplog entry count, expected extent map)
+    at every protocol point a crash could land after."""
+    from repro.core.kvcache import KVGeometry, PagedKVCache
+    from repro.core.oplog import OpLog
+
+    rng = np.random.default_rng(seed)
+    device = PMDevice(size=4 * 1024 * 1024)
+    oplog = OpLog(device, base_block=1, num_blocks=16)
+    kv = PagedKVCache(KVGeometry(num_pages=32, page_tokens=8, max_seqs=4,
+                                 pages_per_seq=8), mode=Mode.STRICT,
+                      oplog=oplog)
+    sid = kv.create_seq()
+    kv.append_tokens(sid, int(rng.integers(1, 20)))    # published prefix
+    cuts = [(len(oplog.scan()), dict(kv.committed_extents(sid)))]
+    cap = kv.geom.pages_per_seq * kv.geom.page_tokens
+    for _ in range(n_rounds):
+        room = cap - kv.seq_length(sid)
+        if room < 2:
+            break
+        take = int(rng.integers(1, min(room, 12) + 1))
+        accepted = int(rng.integers(0, take + 1))
+        kv.append_tokens(sid, take, publish=False)     # STAGED drafts
+        target = kv.seq_length(sid) - (take - accepted)
+        kv.commit(sid, upto_len=target)                # publish accepted
+        # a crash HERE (commit durable, truncate not yet logged) is the
+        # adversarial window: the staged rejects must not be replayable
+        cuts.append((len(oplog.scan()), dict(kv.committed_extents(sid))))
+        kv.rollback(sid, target)                       # OP_TRUNCATE
+        cuts.append((len(oplog.scan()), dict(kv.committed_extents(sid))))
+    kv.free_seq(sid)                                   # OP_UNLINK tombstone
+    cuts.append((len(oplog.scan()), {}))
+    assert kv.pages_in_use == 0
+    return oplog, sid, cuts
+
+
+def _check_spec_crash_exactness(seed, n_rounds):
+    from repro.core.kvcache import replay_kv_commits
+
+    oplog, sid, cuts = _drive_spec_rounds(seed, n_rounds)
+    entries = oplog.scan()
+    # (a) exactness at every protocol point: replaying the log as durable
+    # at that point reconstructs exactly the accepted extent — in
+    # particular at the cut BETWEEN OP_KV_COMMIT and OP_TRUNCATE
+    for n, expected in cuts:
+        state = replay_kv_commits(entries[:n])
+        assert state.get(sid, {}) == expected, \
+            f"replay at cut {n} diverged from the accepted extent"
+    # (b) arbitrary torn prefixes: the replayed extent is always a
+    # CONTIGUOUS prefix of pages (commits land in order; truncates keep a
+    # prefix) — a rejected draft page never appears because it was never
+    # committed at all
+    for n in range(len(entries) + 1):
+        ext = replay_kv_commits(entries[:n]).get(sid, {})
+        assert sorted(ext) == list(range(len(ext)))
+    # (c) recovery is idempotent under repeated crashes during replay
+    assert replay_kv_commits(entries + entries) == replay_kv_commits(entries)
+
+
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n_rounds=st.integers(min_value=1, max_value=8))
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_strict_crash_mid_speculation_replays_accepted_extent(seed, n_rounds):
+    _check_spec_crash_exactness(seed, n_rounds)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_strict_crash_mid_speculation_deterministic(seed):
+    _check_spec_crash_exactness(seed, n_rounds=6)

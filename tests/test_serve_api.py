@@ -15,7 +15,8 @@ from repro.core.oplog import OP_KV_COMMIT, OpLog
 from repro.models import build_model
 from repro.models.spec import init_params
 from repro.serve import (ArrivalSpec, OpenLoopDriver, PrefixCache,
-                         SamplingParams, ServeClient, ServingEngine)
+                         SamplingParams, ServeClient, ServingEngine,
+                         SpecConfig)
 from repro.serve.arrival import poisson_schedule, trace_schedule
 
 PROMPT = [5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17]
@@ -580,3 +581,32 @@ def test_open_loop_mixed_mode_sessions(qwen):
     strict_sids = {r.seq_id for r in reqs if r.mode is Mode.STRICT}
     commits = [e for e in oplog.scan() if e.op == OP_KV_COMMIT]
     assert commits and {e.inode for e in commits} <= strict_sids
+
+
+def test_spec_session_streams_identical_and_gauges_drain(qwen):
+    """A speculative session streams the same greedy tokens a plain
+    session does, spec counters move, and (via the autouse obs_invariants
+    fixture) the slot/page gauges drain back to zero afterwards — the
+    draft/verify/rollback cycle may not leak pool pages."""
+    cfg, api, params = qwen
+    prompt = ([5, 6, 7, 8, 9, 10, 11, 12, 13] * 2)[:18]
+    client = ServeClient(api, params, max_batch=2, max_seq=64, page_tokens=8)
+    plain = list(client.open_session().generate(prompt, max_new_tokens=10))
+    assert client.engine.spec_steps == 0
+
+    spec_client = ServeClient(api, params, max_batch=2, max_seq=64,
+                              page_tokens=8)
+    sess = spec_client.open_session(spec=SpecConfig(k=5))
+    got = list(sess.generate(prompt, max_new_tokens=10))
+    assert got == plain, "speculative session changed greedy stream"
+    eng = spec_client.engine
+    assert eng.spec_steps > 0 and eng.spec_drafted_tokens > 0
+    snap = eng.obs.registry.snapshot()
+    assert snap["spec.steps"] == eng.spec_steps
+    assert snap["spec.accept_rate"] == pytest.approx(
+        eng.spec_accepted_tokens / eng.spec_drafted_tokens)
+    # per-call override: a session opened WITHOUT spec can opt in per
+    # submit, and a spec session's non-greedy submit drops it
+    r = sess.submit(prompt, max_new_tokens=2, temperature=1.0)
+    assert r.spec is None
+    spec_client.run_until_done()

@@ -1,0 +1,343 @@
+"""Speculative decoding over the rollback path (DESIGN.md §8): draft/
+verify/rollback must be OUTPUT-INVISIBLE under greedy sampling, and the
+bugs it exposed must stay fixed — rollback CoW of a kept-but-shared tail
+page, the width-aware ``_cap`` overflow guard, and deterministic sampler
+tie-breaking (verify-vs-draft agreement must not depend on memory order).
+"""
+
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import PMDevice
+from repro.core.kvcache import KVGeometry, PagedKVCache, replay_kv_commits
+from repro.core.modes import Mode
+from repro.core.oplog import OP_TRUNCATE, OpLog
+from repro.models import build_model
+from repro.models.spec import init_params
+from repro.serve import SamplingParams, ServingEngine, SpecConfig
+from repro.serve.engine import RECURRENT_STATE_KEYS
+
+# highly compressible: the n-gram drafter locks onto the cycle, so spec
+# steps actually carry (and mostly accept) drafts
+REPEAT = ([5, 6, 7, 8, 9, 10, 11, 12, 13] * 8)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    api = build_model(cfg)
+    params = init_params(api.init_specs(), jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+# ---------------------------------------------------------- output identity
+
+
+def test_spec_greedy_outputs_identical(qwen):
+    """The acceptance rule (longest agreeing prefix, token after the last
+    accepted draft comes free) makes speculation a pure latency
+    optimization: greedy outputs match token-for-token, in fewer steps."""
+    cfg, api, params = qwen
+    outs, steps, engines = [], [], []
+    for spec in (None, SpecConfig(k=7)):
+        eng = ServingEngine(api, params, max_batch=2, max_seq=64,
+                            page_tokens=8, spec=spec)
+        req = eng.submit(REPEAT[:18], max_new_tokens=24)
+        eng.run_until_done()
+        outs.append(req.output)
+        steps.append(eng.steps)
+        engines.append(eng)
+    assert outs[0] == outs[1], "speculation changed greedy output"
+    assert len(outs[1]) == 24
+    spec_eng = engines[1]
+    assert spec_eng.spec_steps > 0 and spec_eng.spec_drafted_tokens > 0
+    assert spec_eng.spec_accepted_tokens > 0
+    assert steps[1] < steps[0], "speculation did not save steps"
+    # verify accounting: drafted == accepted + rejected, per-request
+    # counters mirror the engine's
+    assert spec_eng.spec_drafted_tokens == (spec_eng.spec_accepted_tokens
+                                            + spec_eng.spec_rejected_tokens)
+    for eng in engines:
+        assert eng.controller.pages_in_use == 0, "leaked pool pages"
+
+
+def test_spec_refused_for_nongreedy_sampling(qwen):
+    """Speculation verifies drafts against argmax agreement; a stochastic
+    sampler breaks that equivalence, so non-greedy submits drop spec."""
+    cfg, api, params = qwen
+    eng = ServingEngine(api, params, max_batch=2, max_seq=64, page_tokens=8,
+                        spec=SpecConfig(k=4))
+    greedy = eng.submit([1, 2, 3], max_new_tokens=1)
+    assert greedy.spec is not None
+    hot = eng.submit([1, 2, 3], max_new_tokens=1,
+                     sampling=SamplingParams(temperature=1.0))
+    assert hot.spec is None
+    # top_k=1 IS greedy regardless of temperature
+    topk1 = eng.submit([1, 2, 3], max_new_tokens=1,
+                       sampling=SamplingParams(temperature=1.0, top_k=1))
+    assert topk1.spec is not None
+    eng.run_until_done()
+    assert eng.controller.pages_in_use == 0
+
+
+def test_spec_refused_for_recurrent_state_models():
+    """Rollback rewinds paged KV (metadata-only) but cannot rewind carried
+    conv/h/ssd state, so recurrent-state models refuse speculation."""
+    cfg = get_config("mamba2-1.3b", smoke=True)
+    api = build_model(cfg)
+    params = init_params(api.init_specs(), jax.random.PRNGKey(0))
+    eng = ServingEngine(api, params, max_batch=1, max_seq=64, page_tokens=8,
+                        spec=SpecConfig(k=4))
+    assert eng._recurrent
+    assert eng.default_spec is None
+    req = eng.submit([1, 2, 3], max_new_tokens=1, spec=SpecConfig(k=4))
+    assert req.spec is None
+
+
+# ------------------------------------------------- rollback CoW (regression)
+
+
+def test_rollback_cows_kept_shared_tail():
+    """REGRESSION (the shared-page rollback bug): rollback used to release
+    the rejected pages and return — leaving a kept-but-now-partial tail
+    page that is SHARED (fork / trie-pin) as the append target.  The next
+    append then wrote through the shared page, corrupting the other
+    holder's bytes.  Rollback must CoW that tail exactly like
+    prepare_append does."""
+    kv = PagedKVCache(KVGeometry(num_pages=16, page_tokens=8, max_seqs=4,
+                                 pages_per_seq=4))
+    a = kv.create_seq()
+    kv.append_tokens(a, 12)               # pages [p0, p1], tail p1 partial
+    b = kv.fork(a)                        # p0/p1 now shared, refcount 2
+    p1 = int(kv.page_table()[a][1])
+    assert kv.page_refcount(p1) == 2
+
+    cow = kv.rollback(a, 10)              # keeps both pages; tail shared
+    assert cow is not None, \
+        "rollback kept a shared partial tail without CoW (pre-fix bug)"
+    src, dst = cow
+    assert src == p1 and dst != p1
+    assert int(kv.page_table()[a][1]) == dst     # a writes its own copy
+    assert int(kv.page_table()[b][1]) == p1      # b keeps the original
+    assert kv.page_refcount(p1) == 1 and kv.page_refcount(dst) == 1
+
+    # the re-append after rollback lands in the private copy
+    assert kv.prepare_append(a, 2) is None       # already CoW'd — no second
+    kv.append_tokens(a, 2)
+    assert int(kv.page_table()[a][1]) == dst
+    assert kv.seq_length(b) == 12                # b untouched throughout
+    kv.free_seq(a)
+    kv.free_seq(b)
+    assert kv.pages_in_use == 0
+
+
+def test_rollback_aligned_or_private_tail_needs_no_cow():
+    kv = PagedKVCache(KVGeometry(num_pages=16, page_tokens=8, max_seqs=4,
+                                 pages_per_seq=4))
+    a = kv.create_seq()
+    kv.append_tokens(a, 12)
+    b = kv.fork(a)
+    # page-aligned target: no partial tail at all
+    assert kv.rollback(a, 8) is None
+    # private partial tail (refcount 1 after the shrink): no CoW either
+    c = kv.create_seq()
+    kv.append_tokens(c, 12)
+    assert kv.rollback(c, 10) is None
+    for sid in (a, b, c):
+        kv.free_seq(sid)
+    assert kv.pages_in_use == 0
+
+
+def _page_bytes(caches, page):
+    """Snapshot every layer pool's slab for one physical page (mirrors the
+    engine's _copy_page_on_device walk)."""
+    out = []
+
+    def walk(node):
+        if isinstance(node, dict):
+            if set(node) <= RECURRENT_STATE_KEYS:
+                return
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, tuple):
+            for x in node:
+                if hasattr(x, "ndim") and x.ndim == 5:
+                    out.append(np.asarray(x[:, page]))
+                elif hasattr(x, "ndim") and x.ndim == 4:
+                    out.append(np.asarray(x[page]))
+
+    for key in ("group", "tail", "pools"):
+        if key in caches:
+            walk(caches[key])
+    return out
+
+
+def test_adopt_rollback_append_keeps_pinned_chain_bytes(qwen):
+    """REGRESSION (engine-level): adopt_prefix -> rollback into the adopted
+    span -> re-append must leave the trie's pinned chain BYTE-identical in
+    the device pools.  Pre-fix, rollback kept the pinned page as the
+    sequence's tail and the re-appended chunks scattered straight into
+    cached bytes every later adopter would read."""
+    cfg, api, params = qwen
+    eng = ServingEngine(api, params, max_batch=2, max_seq=64, page_tokens=8,
+                        prefix_cache=True)
+    prompt = list(range(1, 17))                    # two full pages
+    eng.submit(prompt, max_new_tokens=2)
+    eng.run_until_done()                           # publishes into the trie
+    pages, n_tok = eng.prefix_cache.match(prompt, align=eng.chunk)
+    assert n_tok == 8 and len(pages) == 1          # one adoptable page
+    pinned = pages[0]
+    snap = _page_bytes(eng.caches, pinned)
+
+    req = eng.submit(prompt, max_new_tokens=4)
+    eng.step()                                     # admit: adopts the page
+    assert req.prefix_tokens == 8
+    # reject back INTO the adopted span (target off the page grid): the
+    # kept tail is the pinned trie page — rollback must hand the request
+    # a private copy before anything re-appends
+    cowed = eng._rollback_to(req, 5)
+    assert cowed, "rollback kept the pinned trie page as append target"
+    assert int(eng.controller.page_table()[req.seq_id][0]) != pinned
+    req.prompt_pos = 5                             # re-prefill from there
+    req.output.clear()
+    eng.run_until_done()
+    assert req.done and len(req.output) == 4
+
+    assert all(np.array_equal(s, n) for s, n in
+               zip(snap, _page_bytes(eng.caches, pinned))), \
+        "re-append after rollback mutated the trie's pinned page bytes"
+    # the chain is still adoptable and still maps to the same page
+    pages2, n2 = eng.prefix_cache.match(prompt, align=eng.chunk)
+    assert (pages2, n2) == ([pinned], 8)
+    eng.prefix_cache.clear()
+    assert eng.controller.pages_in_use == 0
+
+
+# ------------------------------------------------------- width-aware _cap
+
+
+def test_spec_append_respects_cap_at_boundary(qwen):
+    """The old overflow check assumed single-token appends; a K-token
+    speculative append starting at ``_cap - K + 1`` sailed past the cap.
+    The width-aware guard clamps the draft so no append ever ends beyond
+    ``_cap`` (the page-table row's addressable floor)."""
+    cfg, api, params = qwen
+    K = 7
+    eng = ServingEngine(api, params, max_batch=1, max_seq=64, page_tokens=8,
+                        spec=SpecConfig(k=K))
+    start = eng._cap - K + 1              # the pre-fix overflow position
+    prompt = (REPEAT * 4)[:start]
+    req = eng.submit(prompt, max_new_tokens=64)
+    max_seen = 0
+    for _ in range(200):
+        if req.done:
+            break
+        eng.step()
+        if not req.done:
+            n = eng.controller.seq_length(req.seq_id)
+            max_seen = max(max_seen, n)
+            assert n <= eng._cap, \
+                f"speculative append overflowed _cap: {n} > {eng._cap}"
+    assert req.done and req.truncated     # capacity-bound, not token-bound
+    assert eng.spec_steps > 0             # drafts actually rode the boundary
+    assert max_seen >= start              # and we did reach the danger zone
+    assert eng.controller.pages_in_use == 0
+
+
+# ------------------------------------------------ STRICT tombstone ordering
+
+
+def test_strict_spec_logs_truncate_tombstones(qwen):
+    """STRICT speculation publishes accepted pages FIRST (OP_KV_COMMIT via
+    commit(upto_len=accepted)), then tombstones the rejection (OP_TRUNCATE)
+    — one tombstone per shrinking rollback, and identical greedy output."""
+    cfg, api, params = qwen
+    outs = []
+    for spec in (None, SpecConfig(k=7)):
+        device = PMDevice(size=4 * 1024 * 1024)
+        oplog = OpLog(device, base_block=1, num_blocks=16)
+        eng = ServingEngine(api, params, max_batch=1, max_seq=64,
+                            page_tokens=8, mode=Mode.STRICT, oplog=oplog,
+                            spec=spec)
+        req = eng.submit(REPEAT[:18], max_new_tokens=16)
+        eng.run_until_done()
+        outs.append(req.output)
+        entries = oplog.scan()
+        truncates = [e for e in entries if e.op == OP_TRUNCATE]
+        if spec is None:
+            assert not truncates
+        else:
+            assert eng.spec_steps > 0
+            assert len(truncates) == eng.spec_rollbacks
+            # the request finished and was unlinked: full-log replay holds
+            # no extent for it (tombstoned), and replay is idempotent
+            state = replay_kv_commits(entries)
+            assert replay_kv_commits(entries + entries) == state
+            assert req.seq_id not in state
+    assert outs[0] == outs[1]
+
+
+# --------------------------------------------------- sampler tie-breaking
+
+
+def _sampler(seed=0):
+    return SimpleNamespace(rng=np.random.default_rng(seed))
+
+
+def test_greedy_tie_breaks_to_lowest_token_id():
+    row = np.array([1.0, 3.0, 3.0, 3.0], np.float32)
+    assert ServingEngine._sample(_sampler(), row, SamplingParams()) == 1
+    # top_k=1 takes the greedy path too, whatever the temperature
+    sp = SamplingParams(temperature=1.0, top_k=1)
+    assert ServingEngine._sample(_sampler(), row, sp) == 1
+
+
+def test_top_k_tie_straddling_kth_place_keeps_lowest_ids():
+    """A tie across the top-k boundary must keep exactly k candidates —
+    the LOWEST-id ones.  The old partition-threshold filter admitted every
+    tied logit (k+1 candidates here), making sampled output depend on how
+    many ties the logits happened to carry."""
+    row = np.array([1.0, 1.0, 1.0, 0.5], np.float32)
+    sp = SamplingParams(temperature=1.0, top_k=2)
+    seen = {ServingEngine._sample(_sampler(seed), row, sp)
+            for seed in range(64)}
+    assert seen == {0, 1}, f"top-k boundary tie leaked ids: {seen}"
+
+
+def test_top_k_no_tie_unchanged():
+    row = np.array([0.1, 2.0, 1.0, 3.0], np.float32)
+    sp = SamplingParams(temperature=1.0, top_k=2)
+    seen = {ServingEngine._sample(_sampler(seed), row, sp)
+            for seed in range(64)}
+    assert seen == {1, 3}
+
+
+# ------------------------------------------------------------- the drafter
+
+
+def test_drafter_prompt_lookup_and_periodic_extrapolation():
+    req = SimpleNamespace(prompt=[1, 2, 3, 9, 1, 2, 3], output=[],
+                          spec=SpecConfig(k=4, ngram_max=3, ngram_min=1))
+    # suffix [1,2,3] matched at the front; continuation [9,1,2,3]
+    assert ServingEngine._draft(None, req, 4) == [9, 1, 2, 3]
+    # a token stuck on ...x,x,x drafts [x]*k via period-1 extrapolation
+    req2 = SimpleNamespace(prompt=[4, 7, 7, 7], output=[],
+                           spec=SpecConfig(k=3, ngram_max=3, ngram_min=1))
+    assert ServingEngine._draft(None, req2, 3) == [7, 7, 7]
+    # no recurring n-gram: no draft
+    req3 = SimpleNamespace(prompt=[1, 2, 3, 4, 5], output=[],
+                           spec=SpecConfig(k=3, ngram_max=3, ngram_min=1))
+    assert ServingEngine._draft(None, req3, 3) == []
+
+
+def test_spec_config_validates():
+    with pytest.raises(ValueError):
+        SpecConfig(k=0)
+    with pytest.raises(ValueError):
+        SpecConfig(ngram_min=0)
+    with pytest.raises(ValueError):
+        SpecConfig(ngram_min=3, ngram_max=2)

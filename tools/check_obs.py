@@ -27,7 +27,11 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.obs import validate_chrome_trace  # noqa: E402
 
-REQUIRED_SPANS = {"step", "admit", "schedule", "serve_step", "sample"}
+REQUIRED_SPANS = {"step", "admit", "schedule", "serve_step", "sample",
+                  # speculative decoding taxonomy: drafting (client-side
+                  # guesswork), the verify pass over the target logits,
+                  # and the metadata-only rollback of rejected tails
+                  "draft", "verify", "rollback"}
 
 
 def check_trace(path: Path) -> None:

@@ -35,6 +35,17 @@ python -m benchmarks.serve_micro --fast --out BENCH_serve.json
 echo "== obs gate: trace validity + instrumentation overhead bound =="
 python tools/check_obs.py runs/ci-dryrun/serve_trace.json BENCH_serve.json
 
+echo "== speculation gate: decode_speedup >= 1.5x with identical outputs =="
+python - <<'PY'
+import json
+row = json.load(open("BENCH_serve.json"))["decode_speedup"]
+assert row["identical_outputs"], "speculation changed greedy outputs"
+assert row["speedup"] >= 1.5, \
+    f"spec decode speedup {row['speedup']:.2f}x < 1.5x bar"
+print(f"[ci] spec decode: {row['speedup']:.1f}x, "
+      f"accept rate {row['accept_rate']:.0%}, identical outputs")
+PY
+
 echo "== arrival microbench (fast): BENCH_arrival.json trajectory =="
 python -m benchmarks.arrival_micro --fast --out BENCH_arrival.json
 
