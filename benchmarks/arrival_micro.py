@@ -13,6 +13,14 @@ Two measurements over the session serving API (DESIGN.md §8):
      The driver runs obs-instrumented, so each run also reports its
      software-overhead split (client / scheduler / device / persistence
      shares, DESIGN.md §10) and the 1-second profiler windows.
+  3. pressure_sweep — the host-tier case (DESIGN.md §8a): N prefix
+     families round-robin through a device pool capped (``pool_pages``)
+     at ~50% of their shared working set, so trie eviction is constant.
+     Tier ON (``host_cache_pages``) demotes evicted chains D2H and
+     promotes them back on re-admission; tier OFF forgets them.  A
+     serial pass asserts token-identical outputs and gates hit-rate
+     (>= 2x tier-off, checked by tools/ci.sh); open-loop passes compare
+     TTFT against an uncontended (cache-always-hits) reference.
 
 Artifact: ``BENCH_arrival.json``.
 
@@ -49,11 +57,47 @@ def make_prompts(vocab: int, n: int, seed: int = 0) -> List[List[int]]:
             for _ in range(n)]
 
 
+def make_family_prompts(vocab: int, n_families: int, passes: int,
+                        seed: int = 3) -> List[List[int]]:
+    """``passes`` round-robin sweeps over ``n_families`` shared prefixes:
+    reuse distance = n_families, so a pool that can't pin every family
+    evicts each chain before its next visit (the tier's workload).  Tails
+    are fresh per request — only the shared prefix can hit."""
+    rng = np.random.default_rng(seed)
+    fams = [list(rng.integers(1, vocab, SHARED_TOKENS))
+            for _ in range(n_families)]
+    return [fams[f] + list(rng.integers(1, vocab,
+                                        PROMPT_LEN - SHARED_TOKENS))
+            for _ in range(passes) for f in range(n_families)]
+
+
 def _client(api, params, *, prefix_cache: bool, max_batch: int,
-            obs: Obs = None) -> ServeClient:
+            obs: Obs = None, pool_pages: int = None,
+            host_cache_pages: int = 0) -> ServeClient:
     return ServeClient(api, params, max_batch=max_batch, max_seq=128,
                        page_tokens=PAGE_TOKENS, prefix_cache=prefix_cache,
-                       obs=obs)
+                       pool_pages=pool_pages,
+                       host_cache_pages=host_cache_pages, obs=obs)
+
+
+def _tier_row(eng) -> dict:
+    """Prefix-cache + host-tier counters shared by the sweep rows."""
+    pc = eng.prefix_cache
+    row = {
+        "hits": pc.hits, "misses": pc.misses,
+        "hit_rate": pc.hits / max(pc.hits + pc.misses, 1),
+        "tokens_saved": pc.tokens_saved,
+        "pages_evicted": pc.pages_evicted,
+        "demotions": pc.demotions, "promotions": pc.promotions,
+        "truncations": eng.truncations,
+    }
+    if eng.tier is not None:
+        row.update(eng.tier.stats())
+        row["promote_events"] = eng.promote_events
+        row["promote_lag_ms"] = (
+            eng.promote_lag_ns / eng.promote_events / 1e6
+            if eng.promote_events else 0.0)
+    return row
 
 
 def bench_prefix_admission(api, params, prompts, *, prefix_cache: bool,
@@ -86,14 +130,49 @@ def bench_prefix_admission(api, params, prompts, *, prefix_cache: bool,
     }
 
 
+def bench_pressure_serial(api, params, prompts, *, pool_pages: int,
+                          host_cache_pages: int,
+                          decode_tokens: int) -> dict:
+    """One request at a time through a capped pool: the controlled view
+    of demote -> re-admit -> promote.  Returns outputs so the caller can
+    assert the tier round-trip is byte-exact (identical greedy tokens)."""
+    client = _client(api, params, prefix_cache=True, max_batch=4,
+                     pool_pages=pool_pages,
+                     host_cache_pages=host_cache_pages)
+    sess = client.open_session()
+    eng = client.engine
+    outputs = []
+    for prompt in prompts:
+        req = sess.submit(prompt, max_new_tokens=decode_tokens)
+        client.run_until_done()
+        assert not req.truncated, "serial pressure pass sized to fit"
+        outputs.append(req.output)
+    row = _tier_row(eng)
+    row["pool_pages"] = pool_pages
+    row["host_cache_pages"] = host_cache_pages
+    row["outputs"] = outputs
+    return row
+
+
 def bench_open_loop(api, params, prompts, *, prefix_cache: bool,
-                    rate_rps: float, decode_tokens: int, seed: int) -> dict:
+                    rate_rps: float, decode_tokens: int, seed: int,
+                    max_batch: int = 4, pool_pages: int = None,
+                    host_cache_pages: int = 0) -> dict:
     obs = Obs(window_s=0.25)
-    client = _client(api, params, prefix_cache=prefix_cache, max_batch=4,
-                     obs=obs)
+    client = _client(api, params, prefix_cache=prefix_cache,
+                     max_batch=max_batch, pool_pages=pool_pages,
+                     host_cache_pages=host_cache_pages, obs=obs)
     # warm the compiled shapes so jit time doesn't pollute TTFT
     warm = client.open_session()
     list(warm.generate([1, 2, 3], max_new_tokens=2))
+    if host_cache_pages:
+        # also warm the tier round trip: demote (gather) + promote
+        # (scatter) trigger their own jit dispatches on first use, which
+        # would otherwise land inside the first measured promotion's TTFT
+        wp = list(np.random.default_rng(9).integers(1, 100, PROMPT_LEN))
+        list(warm.generate(wp, max_new_tokens=1))
+        client.engine.prefix_cache.release(host_cache_pages)
+        list(warm.generate(wp, max_new_tokens=1))
     obs.ledger.reset()           # compile time is not device time
     sched = poisson_schedule(len(prompts), rate_rps, seed=seed)
     workload = [ArrivalSpec(t, p, decode_tokens)
@@ -101,7 +180,10 @@ def bench_open_loop(api, params, prompts, *, prefix_cache: bool,
     result = OpenLoopDriver(client).run(workload)
     pct = result.percentiles()
     breakdown = obs.ledger.breakdown()
+    cache = (_tier_row(client.engine)
+             if client.engine.prefix_cache is not None else None)
     return {
+        "cache": cache,
         "software_overhead": {
             "shares": breakdown["shares"],
             "software_frac": breakdown["software_frac"],
@@ -142,6 +224,44 @@ def run(fast: bool = False, arch: str = "qwen2-1.5b") -> dict:
     ol_off = bench_open_loop(api, params, open_prompts, prefix_cache=False,
                              rate_rps=rate, decode_tokens=decode_tokens, seed=2)
 
+    # --- pressure sweep (host tier, DESIGN.md §8a) ----------------------
+    # Pool capped at ~50% of the shared-prefix working set (3 pages per
+    # family + the reserved null page), so round-robin reuse distance
+    # exceeds what the trie can pin and every chain is evicted before its
+    # next visit.  HOST_PAGES comfortably holds every demoted chain.
+    n_fam = 6 if fast else 8
+    working_pages = n_fam * (SHARED_TOKENS // PAGE_TOKENS)
+    cap = 1 + working_pages // 2
+    host_pages = 64
+    ps_prompts = make_family_prompts(cfg.vocab, n_fam, 2)
+    ps_on = bench_pressure_serial(api, params, ps_prompts, pool_pages=cap,
+                                  host_cache_pages=host_pages,
+                                  decode_tokens=decode_tokens)
+    ps_off = bench_pressure_serial(api, params, ps_prompts, pool_pages=cap,
+                                   host_cache_pages=0,
+                                   decode_tokens=decode_tokens)
+    identical = ps_on.pop("outputs") == ps_off.pop("outputs")
+    assert identical, "host-tier round trip changed greedy outputs"
+    hit_ratio = (ps_on["hit_rate"] / ps_off["hit_rate"]
+                 if ps_off["hit_rate"] else None)       # None: off never hit
+
+    # TTFT under the same pressure, open-loop: the IDENTICAL prompt list
+    # three ways, only the pool differing.  max_batch=6 sizes the native
+    # pool (6 x 8 pages) so the uncapped reference pins every family's
+    # chain plus every tail — the genuinely uncontended TTFT floor —
+    # while the capped runs relive the serial sweep's eviction churn.
+    ol_cap = max(cap, 11)
+    ps_rate = 2.0
+    ol_ps = make_family_prompts(cfg.vocab, n_fam, 2, seed=4)
+    kw = dict(prefix_cache=True, rate_rps=ps_rate, max_batch=6,
+              decode_tokens=decode_tokens, seed=5)
+    sw_tier = bench_open_loop(api, params, ol_ps, pool_pages=ol_cap,
+                              host_cache_pages=host_pages, **kw)
+    sw_base = bench_open_loop(api, params, ol_ps, pool_pages=ol_cap, **kw)
+    sw_ref = bench_open_loop(api, params, ol_ps, **kw)
+    ttft_ratio = (sw_tier["ttft_s"]["p50"] / sw_ref["ttft_s"]["p50"]
+                  if sw_ref["ttft_s"].get("p50") else None)
+
     return {
         "bench": "arrival_micro",
         "arch": arch,
@@ -160,6 +280,27 @@ def run(fast: bool = False, arch: str = "qwen2-1.5b") -> dict:
         "open_loop": {
             "prefix_cache": ol_on,
             "baseline": ol_off,
+        },
+        "pressure_sweep": {
+            "n_families": n_fam,
+            "passes": 2,
+            "shared_working_set_pages": working_pages,
+            "pool_pages": cap,
+            "host_cache_pages": host_pages,
+            "serial": {
+                "tiered": ps_on,
+                "baseline": ps_off,
+                "identical_outputs": identical,
+                "hit_rate_ratio": hit_ratio,
+            },
+            "open_loop": {
+                "pool_pages": ol_cap,
+                "rate_rps": ps_rate,
+                "tiered": sw_tier,
+                "baseline": sw_base,
+                "uncontended": sw_ref,
+                "ttft_p50_vs_uncontended": ttft_ratio,
+            },
         },
     }
 
@@ -193,6 +334,26 @@ def main() -> None:
         print(f"[arrival_micro]   overhead: client {sh['client']:.1%} "
               f"sched {sh['scheduler']:.1%} device {sh['device']:.1%} "
               f"persist {sh['persistence']:.1%}")
+    ps = result["pressure_sweep"]
+    sr = ps["serial"]
+    ratio = sr["hit_rate_ratio"]
+    print(f"[arrival_micro] pressure sweep ({ps['n_families']} families, "
+          f"pool {ps['pool_pages']} of {ps['shared_working_set_pages']}-page "
+          f"working set): hit rate {sr['baseline']['hit_rate']:.0%} -> "
+          f"{sr['tiered']['hit_rate']:.0%} "
+          f"({'inf' if ratio is None else f'{ratio:.1f}'}x), "
+          f"demoted {sr['tiered']['pages_demoted']} "
+          f"promoted {sr['tiered']['pages_promoted']}, "
+          f"identical outputs: {sr['identical_outputs']}")
+    ol = ps["open_loop"]
+    tr = ol["ttft_p50_vs_uncontended"]
+    for tag in ("tiered", "baseline", "uncontended"):
+        t = ol[tag]["ttft_s"]
+        print(f"[arrival_micro]   TTFT {tag}: "
+              f"p50={t.get('p50', float('nan'))*1e3:.0f}ms "
+              f"p99={t.get('p99', float('nan'))*1e3:.0f}ms")
+    if tr is not None:
+        print(f"[arrival_micro]   tiered TTFT p50 = {tr:.2f}x uncontended")
     print(f"[arrival_micro] wrote {args.out}")
 
 

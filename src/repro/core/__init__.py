@@ -9,15 +9,17 @@ from .ksplit import FSError, Inode, KSplit, NoEntError
 from .mmap_cache import MmapCache
 from .modes import Mode
 from .oplog import LogEntry, OpLog
-from .pagepool import OutOfSpaceError, PagePool
+from .pagepool import FreeList, OutOfSpaceError, PagePool
 from .pmem import BLOCK_SIZE, CACHELINE, MMAP_CHUNK, Meter, NS, PMDevice
 from .staging import StagedRange, StagingAllocator
 from .store import FileState, StagedExtent, StoreStats, USplit
+from .tier import HostArena, HostTier
 from .volume import Volume, VolumeGeometry
 
 __all__ = [
     "BLOCK_SIZE", "CACHELINE", "MMAP_CHUNK", "ExtentMap", "FSError",
-    "FileState", "Inode", "Journal", "KSplit", "LogEntry", "Meter",
+    "FileState", "FreeList", "HostArena", "HostTier", "Inode", "Journal",
+    "KSplit", "LogEntry", "Meter",
     "MmapCache", "Mode", "NS", "NoEntError", "OpLog", "OutOfSpaceError",
     "PMDevice", "PagePool", "Segment", "StagedExtent", "StagedRange",
     "StagingAllocator", "StoreStats", "Txn", "USplit", "Volume",

@@ -355,7 +355,33 @@ class PagedKVCache:
         FULL, so the adopter's first append opens a fresh page and can
         never scribble on shared bytes).  The adopted extents are logged
         under the ADOPTER's mode, so a STRICT session's crash replay
-        reconstructs its shared prefix too.  Returns tokens adopted."""
+        reconstructs its shared prefix too.  Returns tokens adopted.
+
+        The all-device special case of the staged protocol below: with no
+        host-resident links there is nothing in flight, so the publish
+        happens immediately."""
+        n_tok, fresh = self.adopt_prefix_staged(sid, list(pages))
+        assert not fresh
+        self.finish_adopt(sid)
+        return n_tok
+
+    def adopt_prefix_staged(self, sid: int,
+                            pages: List[Optional[int]],
+                            ) -> Tuple[int, List[Tuple[int, int]]]:
+        """Tiered attach (DESIGN.md §8a): adopt a chain whose pages may be
+        HOST-resident.  ``pages[i] is None`` marks a host link — a fresh
+        device page is reserved for it here, to be filled by an async H2D
+        promotion the engine dispatches later.  Device links hard-link as
+        in ``adopt_prefix``.
+
+        Publish ordering: only the LEADING all-device run is committed
+        (and, for STRICT adopters, logged) now; everything at or past the
+        first reserved page stays unpublished until ``finish_adopt`` —
+        the page-table flip — runs after the copies are enqueued.  A
+        crash between stage and flip therefore replays to a committed
+        PREFIX of the chain, never to an extent whose bytes were still in
+        flight.  Returns (tokens adopted, [(logical idx, reserved page)]).
+        """
         g = self.geom
         with self._lock:
             seq = self._seqs[sid]
@@ -363,20 +389,45 @@ class PagedKVCache:
                 raise ValueError("adopt_prefix requires a fresh sequence")
             if len(pages) > g.pages_per_seq:
                 raise KVPoolFullError("prefix longer than a page-table row")
+            n_fresh = sum(1 for p in pages if p is None)
+            if n_fresh > len(self._free):
+                self.alloc_failures += 1
+                raise KVPoolFullError(
+                    f"need {n_fresh} pages for promotion, "
+                    f"{len(self._free)} free")
             for p in pages:
-                if self._refcount[p] <= 0:
+                if p is not None and self._refcount[p] <= 0:
                     raise ValueError(f"page {p} is free; stale prefix chain")
-            for p in pages:
-                self._refcount[p] += 1
-            seq.pages = list(pages)
-            seq.length = len(pages) * g.page_tokens
-            seq.committed_pages = len(pages)
-            self._page_table[sid, :len(pages)] = pages
+            # validated: no failure past this point may leave partial state
+            fresh: List[Tuple[int, int]] = []
+            phys: List[int] = []
+            for idx, p in enumerate(pages):
+                if p is None:
+                    p = self._alloc_page()
+                    fresh.append((idx, p))
+                else:
+                    self._refcount[p] += 1
+                    self.pages_adopted += 1
+                phys.append(p)
+            seq.pages = phys
+            seq.length = len(phys) * g.page_tokens
+            self._page_table[sid, :len(phys)] = phys
             self._seq_lens[sid] = seq.length
-            self.pages_adopted += len(pages)
-            for idx in range(seq.committed_pages):
+            # commit (and log) only the leading hard-linked run; the rest
+            # publishes at the flip
+            lead = fresh[0][0] if fresh else len(phys)
+            seq.committed_pages = lead
+            for idx in range(lead):
                 self._log_commit(seq, idx)
-            return seq.length
+            return seq.length, fresh
+
+    def finish_adopt(self, sid: int) -> int:
+        """The staged adoption's page-table flip: publish (commit + oplog
+        under the adopter's mode) every page past the leading run, once
+        the engine has enqueued the H2D copies that fill the reserved
+        pages.  Idempotent; returns pages published."""
+        with self._lock:
+            return self._commit_locked(self._seqs[sid])
 
     # ------------------------------------------------------------- page pins
 

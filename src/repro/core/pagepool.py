@@ -21,6 +21,49 @@ class OutOfSpaceError(Exception):
     pass
 
 
+class FreeList:
+    """Bounded id recycler: ids in ``[0, capacity)`` are bump-allocated on
+    first use and recycled FIFO after ``free``.  The shared allocation
+    discipline of the pools — ``PagePool`` adds PM-device cost accounting
+    on top; the host tier's arena (``core.tier.HostArena``) uses this
+    directly, where a slot id names a fixed region offset so host buffers
+    are written in place on reuse rather than reallocated."""
+
+    def __init__(self, capacity: int) -> None:
+        if capacity < 0:
+            raise ValueError("capacity must be >= 0")
+        self.capacity = capacity
+        self._next = 0
+        self._free: deque[int] = deque()
+        self._allocated: set[int] = set()
+
+    def alloc(self) -> int | None:
+        """Next free id, or None when all ``capacity`` ids are in use."""
+        if self._free:
+            i = self._free.popleft()
+        elif self._next < self.capacity:
+            i = self._next
+            self._next += 1
+        else:
+            return None
+        self._allocated.add(i)
+        return i
+
+    def free(self, i: int) -> None:
+        if i not in self._allocated:
+            raise ValueError(f"double free of id {i}")
+        self._allocated.remove(i)
+        self._free.append(i)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._allocated)
+
+    @property
+    def full(self) -> bool:
+        return len(self._allocated) >= self.capacity
+
+
 class PagePool:
     def __init__(self, device: PMDevice, base_block: int = 1,
                  num_blocks: int | None = None) -> None:

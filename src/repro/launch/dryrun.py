@@ -310,7 +310,8 @@ def run_cells(cells, *, multi_pod: bool, serve_impl: str, out_dir: Path,
 
 
 def smoke_serve_sessions(arch: str, out_dir: Path, *,
-                         trace: bool = False) -> dict:
+                         trace: bool = False,
+                         host_cache_pages: int = 0) -> dict:
     """End-to-end session-API smoke (CI gate): two sessions in different
     consistency modes on ONE engine, a shared-prefix workload through
     prefix-cache admission, and a tiny open-loop arrival run.  Gates that
@@ -318,7 +319,10 @@ def smoke_serve_sessions(arch: str, out_dir: Path, *,
     serving PROGRAM compiles.  With ``trace=True`` the run is
     obs-instrumented: a validated Chrome trace lands in
     ``out_dir/serve_trace.json`` and the record carries the overhead
-    breakdown + counter snapshot (the CI obs cell)."""
+    breakdown + counter snapshot (the CI obs cell).  With
+    ``host_cache_pages > 0`` a host cold tier is attached and the smoke
+    forces one demote -> staged-promote round trip, so the demote/promote
+    span taxonomy deterministically lands in the CI trace artifact."""
     import numpy as np
 
     from ..core import PMDevice
@@ -334,7 +338,8 @@ def smoke_serve_sessions(arch: str, out_dir: Path, *,
     oplog = OpLog(PMDevice(size=8 * 1024 * 1024), base_block=1, num_blocks=32)
     obs = Obs(trace=True, window_s=0.25) if trace else None
     client = ServeClient(api, params, max_batch=2, max_seq=64,
-                         page_tokens=8, oplog=oplog, obs=obs)
+                         page_tokens=8, oplog=oplog,
+                         host_cache_pages=host_cache_pages, obs=obs)
     posix = client.open_session()
     strict = client.open_session(mode=Mode.STRICT)
     rng = np.random.default_rng(0)
@@ -356,6 +361,28 @@ def smoke_serve_sessions(arch: str, out_dir: Path, *,
     spec_ok = (len(spec_out) == 6
                and client.engine.spec_drafted_tokens > 0)
     ok = ok and spec_ok
+    # tiered round trip: demote the idle cached chains D2H (the engine's
+    # backpressure hook), then re-admit the shared prefix alongside a
+    # filler request so the staged H2D promotion lands mid-step — the
+    # promote span overlaps a serve_step, as in production
+    tier_rec = None
+    if host_cache_pages > 0:
+        eng = client.engine
+        demoted = eng.prefix_cache.release(host_cache_pages)
+        filler = posix.submit(list(rng.integers(1, cfg.vocab, 12)), 3)
+        readmit = posix.submit(shared + [5, 4, 3, 2], 3)
+        client.run_until_done()
+        tier_ok = (demoted > 0 and eng.tier.pages_promoted > 0
+                   and readmit.prefix_tokens > 0
+                   and filler.done and readmit.done)
+        tier_rec = {"demoted_pool_pages_freed": demoted,
+                    "readmit_prefix_tokens": readmit.prefix_tokens,
+                    "promote_events": eng.promote_events,
+                    "promote_lag_ms": round(
+                        eng.promote_lag_ns
+                        / max(eng.promote_events, 1) / 1e6, 3),
+                    **eng.tier.stats()}
+        ok = ok and tier_ok
     record = {"cell": "serve_sessions", "arch": arch,
               "status": "ok" if ok else "failed",
               "requests": len(result.records),
@@ -366,6 +393,8 @@ def smoke_serve_sessions(arch: str, out_dir: Path, *,
                        "accepted": client.engine.spec_accepted_tokens},
               "stats": {k: v for k, v in result.stats.items()
                         if k != "utilization"}}
+    if tier_rec is not None:
+        record["tier"] = tier_rec
     out_dir.mkdir(parents=True, exist_ok=True)
     if obs is not None:
         trace_path = out_dir / "serve_trace.json"
@@ -420,12 +449,17 @@ def main() -> None:
                     help="with --serve-sessions: obs-instrument the run "
                          "and write a validated Chrome trace "
                          "(out/serve_trace.json)")
+    ap.add_argument("--host-cache-pages", type=int, default=0,
+                    help="with --serve-sessions: attach a host cold tier "
+                         "of this many KV pages and smoke one "
+                         "demote -> staged-promote round trip")
     ap.add_argument("--out", default="runs/dryrun")
     args = ap.parse_args()
 
     if args.serve_sessions:
         record = smoke_serve_sessions(args.arch or "qwen2-1.5b",
-                                      Path(args.out), trace=args.trace)
+                                      Path(args.out), trace=args.trace,
+                                      host_cache_pages=args.host_cache_pages)
         if record["status"] != "ok":
             raise SystemExit(1)
         return

@@ -66,6 +66,13 @@ def main() -> None:
                     help="fraction of each prompt drawn from a common "
                          "prefix (exercises prefix-cache admission)")
     ap.add_argument("--no-prefix-cache", action="store_true")
+    ap.add_argument("--host-cache-pages", type=int, default=0,
+                    help="host-memory cold tier below the device pool: "
+                         "evicted prefix-cache chains spill D2H and "
+                         "re-admit via async promote (0 = off)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="cap the device pool's allocatable pages "
+                         "(pressure experiments; 0 = full geometry)")
     ap.add_argument("--rate", type=float, default=0.0,
                     help="open-loop Poisson arrival rate in req/s "
                          "(0 = submit everything up front)")
@@ -91,6 +98,8 @@ def main() -> None:
                          max_seq=args.max_seq, page_tokens=args.page_tokens,
                          chunk_tokens=args.chunk_tokens or None,
                          oplog=oplog, prefix_cache=not args.no_prefix_cache,
+                         host_cache_pages=args.host_cache_pages,
+                         pool_pages=args.pool_pages or None,
                          obs=obs)
     spec = SpecConfig(k=args.spec_k) if args.spec_k > 0 else None
     sessions = [client.open_session(mode=m, temperature=args.temperature,
@@ -130,6 +139,15 @@ def main() -> None:
         pc = st["prefix_cache"]
         print(f"[serve] prefix cache: hits={pc['hits']} "
               f"misses={pc['misses']} tokens_saved={pc['tokens_saved']}")
+    if engine.tier is not None:
+        t = engine.tier
+        lag = (engine.promote_lag_ns / engine.promote_events / 1e6
+               if engine.promote_events else 0.0)
+        print(f"[serve] host tier: demoted={t.pages_demoted} "
+              f"promoted={t.pages_promoted} resident={t.host_pages}"
+              f"/{t.capacity_pages} drops={t.host_drops} "
+              f"promote_lag p50-ish={lag:.1f}ms "
+              f"({engine.promote_events} staged promotions)")
     if result is not None:
         pct = result.percentiles()
         ttft, lat = pct["ttft"], pct["latency"]

@@ -195,6 +195,34 @@ def attach_serving(obs: Obs, engine) -> None:
         reg.register("trie.pinned_tokens",
                      lambda: pc.pinned_pages * pc.page_tokens)
         reg.register("trie.deepest_match", lambda: pc.deepest_match)
+        reg.register("trie.demotions", lambda: pc.demotions, monotonic=True)
+        reg.register("trie.promotions", lambda: pc.promotions,
+                     monotonic=True)
+        reg.register("trie.upgrades", lambda: pc.upgrades, monotonic=True)
+
+    tier = getattr(engine, "tier", None)
+    if tier is not None:
+        # host cold tier (DESIGN.md §8a): demote/promote traffic plus the
+        # promotion-lag pair the windowed profiler derives promote_lag_ms
+        # from (lag = H2D enqueue -> page-table flip, engine-side)
+        reg.register("tier.pages_demoted", lambda: tier.pages_demoted,
+                     monotonic=True)
+        reg.register("tier.pages_promoted", lambda: tier.pages_promoted,
+                     monotonic=True)
+        reg.register("tier.demote_failures", lambda: tier.demote_failures,
+                     monotonic=True)
+        reg.register("tier.host_drops", lambda: tier.host_drops,
+                     monotonic=True)
+        reg.register("tier.demote_ns", lambda: tier.demote_ns,
+                     monotonic=True)
+        reg.register("tier.promote_ns", lambda: tier.promote_ns,
+                     monotonic=True)
+        reg.register("tier.promotes", lambda: engine.promote_events,
+                     monotonic=True)
+        reg.register("tier.promote_lag_ns", lambda: engine.promote_lag_ns,
+                     monotonic=True)
+        reg.register("kv.host_pages", lambda: tier.host_pages)
+        reg.register("kv.host_capacity", lambda: tier.capacity_pages)
 
     log = ctrl.oplog
     if log is not None:

@@ -36,9 +36,21 @@ class Window:
         return self.counters.get("engine.tokens", 0.0) / max(self.duration,
                                                              1e-9)
 
+    @property
+    def promote_lag_ms(self) -> float:
+        """Mean host-tier promotion lag over the window (H2D enqueue ->
+        page-table flip, DESIGN.md §8a) — the stall-visibility metric for
+        the tiered KV store.  0.0 in windows without promotions (or on
+        engines without a host tier)."""
+        n = self.counters.get("tier.promotes", 0.0)
+        if not n:
+            return 0.0
+        return self.counters.get("tier.promote_lag_ns", 0.0) / n / 1e6
+
     def as_dict(self) -> dict:
         return {"index": self.index, "t_start": round(self.t_start, 4),
                 "t_end": round(self.t_end, 4), "tok_s": round(self.tok_s, 1),
+                "promote_lag_ms": round(self.promote_lag_ms, 3),
                 "counters": self.counters, "gauges": self.gauges}
 
 

@@ -9,8 +9,14 @@ serving taxonomy (DESIGN.md §10):
     tid 0          engine timeline: step{admit, schedule, serve_step,
                    sample} per engine step, publish sub-spans when a
                    chunk commits pages
+    tid 2          host-tier demotions (D2H page spills, DESIGN.md §8a)
     tid 100+slot   request lifetimes: one span from admission to
                    finish, args carry the per-request overhead ledger
+    tid 200+slot   host-tier promotions: one [enqueue -> page-table
+                   flip] span per staged adoption — it OVERLAPS the
+                   engine lane's serve_step on purpose (the proof the
+                   H2D copy ran concurrent with compute), which is why
+                   it lives on its own lane (spans nest per tid)
     instants       submit (arrival at the front door), cancel
 
 Storage is allocation-light: one tuple per event in a flat list,

@@ -160,11 +160,20 @@ class ServeClient:
                  default_mode: Mode = Mode.POSIX,
                  oplog: Optional[OpLog] = None,
                  prefix_cache: bool = True,
+                 host_cache_pages: int = 0,
+                 pool_pages: Optional[int] = None,
                  obs: Optional[Obs] = None) -> None:
+        # host_cache_pages > 0 attaches the host-memory cold tier under
+        # the device pool (DESIGN.md §8a): evicted prefix chains spill
+        # D2H instead of being forgotten, and matching admissions promote
+        # them back with an async copy overlapped ahead of prefill.
+        # pool_pages caps the device pool below its geometry (pressure
+        # modeling / capacity planning).
         self.engine = ServingEngine(
             api, params, max_batch=max_batch, max_seq=max_seq,
             page_tokens=page_tokens, chunk_tokens=chunk_tokens, seed=seed,
             mode=default_mode, oplog=oplog, prefix_cache=prefix_cache,
+            host_cache_pages=host_cache_pages, pool_pages=pool_pages,
             obs=obs)
         self.obs = obs
         self._sids = itertools.count()
@@ -209,6 +218,8 @@ class ServeClient:
         }
         if self.engine.prefix_cache is not None:
             out["prefix_cache"] = self.engine.prefix_cache.stats()
+        if self.engine.tier is not None:
+            out["tier"] = self.engine.tier.stats()
         if self.obs is not None:
             out["obs"] = self.obs.stats()
         return out

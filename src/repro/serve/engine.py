@@ -36,8 +36,8 @@ from __future__ import annotations
 
 import itertools
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,9 +46,10 @@ import numpy as np
 from ..core.kvcache import KVPoolFullError, PagedKVCache
 from ..core.modes import Mode
 from ..core.oplog import OpLog
+from ..core.tier import HostTier
 from ..models.registry import ModelAPI
 from ..obs import Obs, attach_serving
-from .prefix_cache import PrefixCache
+from .prefix_cache import PrefixCache, _Node
 
 
 @dataclass(frozen=True)
@@ -108,6 +109,9 @@ class Request:
     spec: Optional[SpecConfig] = None    # speculative decode (None = off)
     spec_drafted: int = 0                # drafted tokens (this request)
     spec_accepted: int = 0               # drafts the target model agreed with
+    promoting: bool = False              # host-tier H2D copy in flight: the
+                                         # slot is held out of the step until
+                                         # the page-table flip lands
     done: bool = False
     truncated: bool = False              # finished early (pool backpressure)
     stalled: bool = False                # run_until_done hit max_steps first
@@ -133,6 +137,8 @@ class ServingEngine:
                  oplog: Optional[OpLog] = None,
                  prefix_cache: "bool | PrefixCache | None" = None,
                  spec: Optional[SpecConfig] = None,
+                 host_cache_pages: int = 0,
+                 pool_pages: Optional[int] = None,
                  obs: Optional[Obs] = None) -> None:
         self.api = api
         self.params = params
@@ -151,6 +157,12 @@ class ServingEngine:
         if "page_table" in self.caches:
             assert tuple(self.caches["page_table"].shape) == \
                 (max_batch, geom.pages_per_seq), "geometry/pool mismatch"
+        # cache-pressure cap (benchmarks, capacity planning): the device
+        # arrays keep their full geometry — the controller simply never
+        # hands out pages past ``pool_pages``, so pressure is modeled
+        # purely on the metadata plane (free list + backpressure ladder)
+        if pool_pages is not None and 1 < pool_pages < geom.num_pages:
+            geom = replace(geom, num_pages=pool_pages)
         self.controller = PagedKVCache(geom, mode=mode, oplog=oplog)
         # prefix cache: True builds one over this controller; an instance
         # is adopted as-is; None/False disables.  Models carrying recurrent
@@ -163,6 +175,21 @@ class ServingEngine:
         self.prefix_cache: Optional[PrefixCache] = (
             PrefixCache(self.controller) if prefix_cache is True
             else prefix_cache or None)
+        # host-memory cold tier under the pool (DESIGN.md §8a): spilled
+        # prefix chains survive eviction as HOST-resident trie nodes and
+        # come back via staged, compute-overlapped H2D promotion.  Only
+        # meaningful with a prefix cache (the trie holds the residency
+        # markers), hence implicitly refused for recurrent archs too.
+        self.tier: Optional[HostTier] = None
+        if self.prefix_cache is not None and host_cache_pages > 0:
+            self.tier = HostTier(host_cache_pages,
+                                 read_page=self._gather_page,
+                                 write_page=self._scatter_page)
+            self.prefix_cache.tier = self.tier
+        # staged promotions awaiting their page-table flip; each entry is
+        # {"req", "plan": [(node, dst_page, host_slot)], "tokens", "t_enq"}
+        self._promotions: List[dict] = []
+        self._page_ops = None        # fused page gather/scatter/copy jits
         # speculative decoding default (requests override per-submit).
         # Refused for recurrent-state models for the same reason as the
         # prefix cache: rollback can rewind paged KV (metadata-only) but
@@ -192,9 +219,15 @@ class ServingEngine:
         self.spec_rejected_tokens = 0
         self.spec_rollbacks = 0         # rollbacks that actually shrank
         self.draft_ns = 0               # host drafting time (client bucket)
+        # tier promotion counters (lag = enqueue -> page-table flip; the
+        # windowed profiler derives promote_lag_ms from the pair)
+        self.promote_events = 0
+        self.promote_lag_ns = 0
         self.obs = obs
         if obs is not None:
             attach_serving(obs, self)
+            if self.tier is not None:
+                self.tier.tracer = obs.tracer
 
     # ------------------------------------------------------------------ API
 
@@ -271,9 +304,12 @@ class ServingEngine:
             obs = self.obs
             tracer = obs.tracer if obs is not None else None
             if self.prefix_cache is not None and req.in_prefill:
-                pages, n_tok = self.prefix_cache.match(req.prompt,
-                                                       align=self.chunk)
-                if n_tok:
+                links, n_tok = self.prefix_cache.match_links(
+                    req.prompt, align=self.chunk)
+                links, n_tok = self._promotable(links, n_tok)
+                n_host = sum(1 for nd in links if nd.on_host)
+                if n_tok and not n_host:
+                    pages = [nd.page for nd in links]
                     if tracer is not None:
                         with tracer.span("adopt_prefix", "serve",
                                          args={"rid": req.rid,
@@ -283,6 +319,26 @@ class ServingEngine:
                     else:
                         self.controller.adopt_prefix(req.seq_id, pages)
                     req.prompt_pos = req.prefix_tokens = start = n_tok
+                elif n_tok:
+                    # tiered attach: hard-link the device links, reserve
+                    # fresh pages for the host links, and hold the slot
+                    # out of the step until the async H2D copies are
+                    # enqueued and the page table flips
+                    # (_flip_promotions).  Device length stays 0 so the
+                    # fixed-shape step cannot read the in-flight pages.
+                    t_enq = time.perf_counter_ns()
+                    spec = [None if nd.on_host else nd.page for nd in links]
+                    _, fresh = self.controller.adopt_prefix_staged(
+                        req.seq_id, spec)
+                    hosted = [nd for nd in links if nd.on_host]
+                    plan: List[Tuple[_Node, int, int]] = [
+                        (nd, page, nd.host_slot)
+                        for nd, (_, page) in zip(hosted, fresh)]
+                    req.promoting = True
+                    req.prompt_pos = req.prefix_tokens = n_tok
+                    self._promotions.append(
+                        {"req": req, "plan": plan, "tokens": n_tok,
+                         "t_enq": t_enq})
             self._set_device_length(slot, start)
             self._zero_slot_state(slot)
             if obs is not None:
@@ -352,6 +408,8 @@ class ServingEngine:
         feeds: Dict[int, int] = {}
         spec_feeds: Dict[int, List[int]] = {}    # slot -> drafts actually fed
         for slot, req in list(self.active.items()):
+            if req.promoting:
+                continue        # H2D copy in flight; joins after the flip
             total = self.controller.seq_length(req.seq_id)
             if req.in_prefill:
                 # prompts are bounded at submit; prefill may stage up to
@@ -427,6 +485,9 @@ class ServingEngine:
             self.controller.append_tokens(req.seq_id, take, reserve=C,
                                           publish=slot not in spec_feeds)
         if not feeds:
+            # nothing to compute this step, but staged promotions must
+            # still land (their adopters are the only work left)
+            self._flip_promotions(tracer, overlapped=False)
             return
 
         self._sync_page_table()
@@ -444,6 +505,13 @@ class ServingEngine:
             # semantics are unchanged)
             jax.block_until_ready(logits)
             t_dev1 = time.perf_counter_ns()
+        # staged promotions land HERE — after the step's compute was
+        # dispatched, against the post-step pool arrays (disjoint pages),
+        # so the H2D copies ride the async queue concurrent with the
+        # host-side sampling below instead of serializing ahead of the
+        # prefill that needs them; dataflow ordering guarantees the NEXT
+        # step reads the copied bytes
+        self._flip_promotions(tracer, overlapped=True)
         logits = np.asarray(logits)
         self.steps += 1
         self.tokens_processed += int(sum(feeds.values()))
@@ -696,6 +764,167 @@ class ServingEngine:
         self._set_device_length(req.slot, target)
         return cow is not None
 
+    # ------------------------------------------------------------------ host tier (DESIGN.md §8a)
+
+    def _promotable(self, links: List[_Node], n_tok: int,
+                    ) -> "Tuple[List[_Node], int]":
+        """Trim a matched chain to what this admission can actually take.
+        Host-resident links need one fresh device page each; the pool is
+        asked to make room (release -> demote idle pins) first, and only
+        a chain that STILL cannot reserve its pages is cut back to the
+        leading device-resident run, re-aligned to the chunk grid."""
+        n_host = sum(1 for nd in links if nd.on_host)
+        if not n_host:
+            return links, n_tok
+        if self.tier is not None:
+            shortfall = n_host - self.controller.num_free_pages
+            if shortfall > 0:
+                self.prefix_cache.release(shortfall)
+            if n_host <= self.controller.num_free_pages:
+                return links, n_tok
+        keep = 0
+        for nd in links:
+            if nd.on_host:
+                break
+            keep += 1
+        pt = self.page_tokens
+        while keep and (keep * pt) % self.chunk:
+            keep -= 1
+        return links[:keep], keep * pt
+
+    def _flip_promotions(self, tracer, *, overlapped: bool) -> None:
+        """Land every staged promotion: enqueue the H2D copies (async),
+        then flip — controller publish (``finish_adopt``: commit + oplog
+        under the adopter's mode), trie re-pin (``promote_commit``), and
+        the device length that lets the slot feed next step.  The flip
+        strictly FOLLOWS the enqueue, so no step can address a promoted
+        page before its copy is in the dispatch queue (relink-style
+        publish ordering).  A node two admissions raced to promote is
+        copied D2D from the winner's flipped page instead (the loser's
+        pages stay privately owned by its adopter — correct, merely
+        unshared)."""
+        if not self._promotions:
+            return
+        pending, self._promotions = self._promotions, []
+        for pr in pending:
+            req: Request = pr["req"]
+            if req.done:
+                # cancelled mid-promotion: free_seq already released the
+                # reserved pages; the chain stays host-resident
+                continue
+            for node, dst, slot in pr["plan"]:
+                if node.on_host and node.host_slot == slot:
+                    self.tier.promote(slot, dst)
+                else:
+                    self._copy_page_on_device(node.page, dst)
+            self.controller.finish_adopt(req.seq_id)
+            for node, dst, slot in pr["plan"]:
+                self.prefix_cache.promote_commit(node, dst, slot)
+            self._set_device_length(req.slot, pr["tokens"])
+            req.promoting = False
+            t1 = time.perf_counter_ns()
+            lag = t1 - pr["t_enq"]
+            self.promote_events += 1
+            self.promote_lag_ns += lag
+            if tracer is not None:
+                # own lane per slot (200+): the [enqueue -> flip] interval
+                # deliberately OVERLAPS the engine lane's serve_step span —
+                # that overlap is the proof the copy ran concurrent with
+                # compute, so it must not share tid 0 (nesting validator)
+                tracer.complete(
+                    "promote", "tier", tracer.rel(pr["t_enq"]),
+                    tracer.rel(t1), tid=200 + req.slot,
+                    args={"rid": req.rid, "pages": len(pr["plan"]),
+                          "tokens": pr["tokens"], "lag_us": lag / 1e3,
+                          "overlapped": overlapped})
+
+    def _pool_leaves(self) -> List:
+        """The layer page pools in a deterministic walk order — that order
+        IS the host arena's page layout, shared by gather/scatter/copy."""
+        out: List = []
+
+        def walk(node):
+            if isinstance(node, dict):
+                if set(node) <= RECURRENT_STATE_KEYS:
+                    return          # recurrent state carries no pages
+                for v in node.values():
+                    walk(v)
+            elif isinstance(node, tuple):
+                for x in node:
+                    if hasattr(x, "ndim") and x.ndim >= 4:
+                        out.append(x)
+
+        for key in ("group", "tail", "pools"):
+            if key in self.caches:
+                walk(self.caches[key])
+        return out
+
+    def _set_pool_leaves(self, new) -> None:
+        """Rebind updated pool arrays into the cache pytree (the writeback
+        half of ``_pool_leaves``; same walk order)."""
+        it = iter(new)
+
+        def walk(node):
+            if isinstance(node, dict):
+                if set(node) <= RECURRENT_STATE_KEYS:
+                    return node
+                return {k: walk(v) for k, v in node.items()}
+            if isinstance(node, tuple):
+                return tuple(next(it) if hasattr(x, "ndim") and x.ndim >= 4
+                             else x for x in node)
+            return node
+
+        for key in ("group", "tail", "pools"):
+            if key in self.caches:
+                self.caches[key] = walk(self.caches[key])
+
+    # page-granular device ops are fused into ONE jitted call each (page
+    # index traced, so each compiles once): a per-leaf .at[].set loop
+    # costs a dispatch per layer pool, which is exactly the host overhead
+    # a demotion on the admission path or a promotion flip cannot afford.
+    # Buffer donation makes the updates in-place where the backend
+    # supports it (CPU ignores donation, so skip it there to avoid the
+    # per-compile warning).
+    def _jit_page_ops(self):
+        if self._page_ops is None:
+            donate = () if jax.default_backend() == "cpu" else (0,)
+
+            def sl(x, page):
+                return x[:, page] if x.ndim == 5 else x[page]
+
+            def put(x, page, v):
+                return (x.at[:, page].set(v) if x.ndim == 5
+                        else x.at[page].set(v))
+
+            gather = jax.jit(
+                lambda leaves, page: tuple(sl(x, page) for x in leaves))
+            scatter = jax.jit(
+                lambda leaves, views, page: tuple(
+                    put(x, page, v) for x, v in zip(leaves, views)),
+                donate_argnums=donate)
+            copy = jax.jit(
+                lambda leaves, src, dst: tuple(
+                    put(x, dst, sl(x, src)) for x in leaves),
+                donate_argnums=donate)
+            self._page_ops = (gather, scatter, copy)
+        return self._page_ops
+
+    def _gather_page(self, page: int) -> List[np.ndarray]:
+        """D2H snapshot of one physical page across every layer pool (the
+        demotion copy)."""
+        gather, _, _ = self._jit_page_ops()
+        dev = gather(tuple(self._pool_leaves()), page)
+        return list(jax.device_get(dev))
+
+    def _scatter_page(self, views: List[np.ndarray], page: int) -> None:
+        """H2D write of a demoted page's bytes into device page ``page``.
+        Dispatched asynchronously: callers sequence the metadata flip
+        AFTER this returns, and dataflow ordering makes any later step
+        that reads the page see the copied bytes."""
+        _, scatter, _ = self._jit_page_ops()
+        self._set_pool_leaves(
+            scatter(tuple(self._pool_leaves()), tuple(views), page))
+
     # ------------------------------------------------------------------ device mirrors
 
     def _sync_page_table(self) -> None:
@@ -773,6 +1002,9 @@ class ServingEngine:
         (hard links); the partially-filled tail page is CoW-copied on the
         device using the page pair the controller allocates."""
         assert req.slot is not None and not req.done
+        # a mid-promotion fork would share a partially-committed extent
+        # map; the flip lands at the next step, so callers just step first
+        assert not req.promoting, "cannot fork during a staged promotion"
         free_slots = [s for s in range(self.max_batch) if s not in self.active]
         if not free_slots:
             raise RuntimeError("no free slot for fork")
@@ -797,23 +1029,6 @@ class ServingEngine:
         """Give the fork a private copy of its tail page in every layer pool
         (the partial-block copy analogue — the only data movement a fork
         costs)."""
-        def copy_pool(leaf):
-            if leaf.ndim == 5:      # [L, P, T, KV, hd]
-                return leaf.at[:, dst_page].set(leaf[:, src_page])
-            if leaf.ndim == 4:      # [P, T, KV, hd]
-                return leaf.at[dst_page].set(leaf[src_page])
-            return leaf
-
-        def walk(node):
-            if isinstance(node, dict):
-                if set(node) <= RECURRENT_STATE_KEYS:
-                    return node     # recurrent state carries no pages
-                return {k: walk(v) for k, v in node.items()}
-            if isinstance(node, tuple):
-                return tuple(copy_pool(x) if hasattr(x, "ndim") and x.ndim >= 4
-                             else x for x in node)
-            return node
-
-        for key in ("group", "tail", "pools"):
-            if key in self.caches:
-                self.caches[key] = walk(self.caches[key])
+        _, _, copy = self._jit_page_ops()
+        self._set_pool_leaves(
+            copy(tuple(self._pool_leaves()), src_page, dst_page))

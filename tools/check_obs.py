@@ -31,7 +31,11 @@ REQUIRED_SPANS = {"step", "admit", "schedule", "serve_step", "sample",
                   # speculative decoding taxonomy: drafting (client-side
                   # guesswork), the verify pass over the target logits,
                   # and the metadata-only rollback of rejected tails
-                  "draft", "verify", "rollback"}
+                  "draft", "verify", "rollback",
+                  # host-tier taxonomy (DESIGN.md §8a): D2H spills on
+                  # tid 2, and [enqueue -> flip] promotion spans on the
+                  # per-slot 200+ lanes (overlapping serve_step by design)
+                  "demote", "promote"}
 
 
 def check_trace(path: Path) -> None:

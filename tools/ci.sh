@@ -22,9 +22,9 @@ python -m repro.launch.dryrun --sweep --shape decode_32k \
 echo "== dryrun smoke: chunked-prefill serve cell =="
 python -m repro.launch.dryrun --arch qwen2-1.5b --shape decode_32k \
     --serve-chunk 16 --smoke --out runs/ci-dryrun
-echo "== dryrun smoke: session API (mixed modes + prefix cache + arrivals) =="
+echo "== dryrun smoke: session API (modes + prefix cache + host tier) =="
 python -m repro.launch.dryrun --serve-sessions --trace --smoke \
-    --out runs/ci-dryrun
+    --host-cache-pages 16 --out runs/ci-dryrun
 
 echo "== dist microbench (fast): BENCH_dist.json trajectory =="
 python -m benchmarks.dist_micro --fast --out BENCH_dist.json
@@ -48,6 +48,24 @@ PY
 
 echo "== arrival microbench (fast): BENCH_arrival.json trajectory =="
 python -m benchmarks.arrival_micro --fast --out BENCH_arrival.json
+
+echo "== tier gate: pressure-sweep hit rate >= 2x tier-off, outputs equal =="
+python - <<'PY'
+import json
+ps = json.load(open("BENCH_arrival.json"))["pressure_sweep"]
+sr = ps["serial"]
+assert sr["identical_outputs"], "host-tier round trip changed outputs"
+on, off = sr["tiered"]["hit_rate"], sr["baseline"]["hit_rate"]
+assert on > 0 and on >= 2 * off, \
+    f"tiered hit rate {on:.0%} not >= 2x tier-off {off:.0%}"
+ratio = sr["hit_rate_ratio"]
+ttft = ps["open_loop"]["ttft_p50_vs_uncontended"]
+print(f"[ci] host tier: hit rate {off:.0%} -> {on:.0%} "
+      f"({'inf' if ratio is None else f'{ratio:.1f}'}x), "
+      f"{sr['tiered']['pages_demoted']} demoted / "
+      f"{sr['tiered']['pages_promoted']} promoted, identical outputs"
+      + (f"; TTFT p50 {ttft:.2f}x uncontended" if ttft else ""))
+PY
 
 if [[ "${1:-}" == "--bench" ]]; then
     echo "== benchmarks (fast) =="
