@@ -202,6 +202,75 @@ def bench_open_loop(api, params, prompts, *, prefix_cache: bool,
     }
 
 
+def bench_fault_sweep(api, params, vocab: int, *, decode_tokens: int,
+                      seed: int = 11) -> dict:
+    """Kill-one-engine open-loop sweep (DESIGN.md §12): the SAME workload
+    through a 2-engine + 1-spare cluster twice — once clean, once with
+    the busiest shard owner killed mid-arrivals — reporting p99 TTFT both
+    ways plus the migration gates (zero lost/duplicated requests,
+    token-identical outputs, >= 1 session resumed from snapshot)."""
+    rng = np.random.default_rng(seed)
+    fams = [list(rng.integers(1, vocab, SHARED_TOKENS)) for _ in range(4)]
+    prompts = [fams[i % 4] + list(rng.integers(1, vocab,
+                                               PROMPT_LEN - SHARED_TOKENS))
+               for i in range(12)]
+    sched = poisson_schedule(len(prompts), 40.0, seed=seed)
+    kill_at = sched[len(sched) // 2]
+
+    def run_once(kill: bool):
+        obs = Obs(window_s=0.25)
+        client = ServeClient(api, params, n_engines=2, n_spares=1,
+                             max_batch=4, max_seq=128,
+                             page_tokens=PAGE_TOKENS,
+                             heartbeat_timeout=3.0, obs=obs)
+        cluster = client.engine
+        sess = client.open_session()
+        list(sess.generate([1, 2, 3], 2))        # warm the shared program
+        obs.ledger.reset()
+
+        def kill_busiest():
+            victim = max(
+                (e for e in range(2) if e not in cluster._killed),
+                key=lambda e: (len(cluster.engines[e].active),
+                               len(cluster.engines[e].waiting)))
+            cluster.kill(victim)
+
+        workload = [ArrivalSpec(t, p, decode_tokens)
+                    for t, p in zip(sched, prompts)]
+        result = OpenLoopDriver(client, session=sess).run(
+            workload, faults=[(kill_at, kill_busiest)] if kill else [])
+        outputs = [r.output for r in sess.requests[1:]]  # skip warm req
+        submitted = sess.requests[1:]
+        finished = cluster.finished
+        lost = sum(1 for r in submitted if r not in finished)
+        dup = sum(1 for r in submitted
+                  if sum(1 for f in finished if f is r) > 1)
+        return {"ttft_s": result.percentiles()["ttft"],
+                "latency_s": result.percentiles()["latency"],
+                "makespan_s": result.makespan,
+                "lost": lost, "duplicated": dup,
+                "sessions_migrated": cluster.sessions_migrated,
+                "sessions_requeued": cluster.sessions_requeued,
+                "router": cluster.router.stats(),
+                "fault": {"steals": cluster.policy.steals,
+                          "remeshes": cluster.policy.remeshes,
+                          "deaths": cluster.monitor.deaths}}, outputs
+
+    clean, ref_outputs = run_once(kill=False)
+    faulted, outputs = run_once(kill=True)
+    return {
+        "n": len(prompts),
+        "kill_at_s": kill_at,
+        "engines": 2, "spares": 1,
+        "no_fault": clean,
+        "kill_one_engine": faulted,
+        "identical_outputs": outputs == ref_outputs,
+        "ttft_p99_fault_vs_clean": (
+            faulted["ttft_s"]["p99"] / clean["ttft_s"]["p99"]
+            if clean["ttft_s"].get("p99") else None),
+    }
+
+
 def run(fast: bool = False, arch: str = "qwen2-1.5b") -> dict:
     cfg = get_config(arch, smoke=True)
     api = build_model(cfg)
@@ -262,6 +331,9 @@ def run(fast: bool = False, arch: str = "qwen2-1.5b") -> dict:
     ttft_ratio = (sw_tier["ttft_s"]["p50"] / sw_ref["ttft_s"]["p50"]
                   if sw_ref["ttft_s"].get("p50") else None)
 
+    fault = bench_fault_sweep(api, params, cfg.vocab,
+                              decode_tokens=max(decode_tokens, 8))
+
     return {
         "bench": "arrival_micro",
         "arch": arch,
@@ -281,6 +353,7 @@ def run(fast: bool = False, arch: str = "qwen2-1.5b") -> dict:
             "prefix_cache": ol_on,
             "baseline": ol_off,
         },
+        "fault_sweep": fault,
         "pressure_sweep": {
             "n_families": n_fam,
             "passes": 2,
@@ -354,6 +427,18 @@ def main() -> None:
               f"p99={t.get('p99', float('nan'))*1e3:.0f}ms")
     if tr is not None:
         print(f"[arrival_micro]   tiered TTFT p50 = {tr:.2f}x uncontended")
+    fs = result["fault_sweep"]
+    for tag in ("no_fault", "kill_one_engine"):
+        t = fs[tag]["ttft_s"]
+        print(f"[arrival_micro] fault sweep {tag}: "
+              f"TTFT p50={t.get('p50', float('nan'))*1e3:.0f}ms "
+              f"p99={t.get('p99', float('nan'))*1e3:.0f}ms")
+    print(f"[arrival_micro]   kill-one-engine: "
+          f"migrated={fs['kill_one_engine']['sessions_migrated']} "
+          f"requeued={fs['kill_one_engine']['sessions_requeued']} "
+          f"lost={fs['kill_one_engine']['lost']} "
+          f"dup={fs['kill_one_engine']['duplicated']} "
+          f"identical={fs['identical_outputs']}")
     print(f"[arrival_micro] wrote {args.out}")
 
 

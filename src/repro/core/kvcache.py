@@ -72,6 +72,19 @@ class _Seq:
     mode: Mode = Mode.POSIX              # per-sequence consistency mode
 
 
+@dataclass(frozen=True)
+class SeqSnapshot:
+    """A sequence's metadata at snapshot time (DESIGN.md §12): enough to
+    rebuild the extent map on ANOTHER controller once the page BYTES have
+    been carried over.  ``pages`` are physical ids on the SOURCE pool —
+    the restore allocates fresh pages on the target and the engine copies
+    bytes between them; the snapshot itself is metadata-only."""
+    length: int                          # tokens at capture
+    committed_pages: int                 # published pages at capture
+    mode: Mode                           # the sequence's consistency mode
+    pages: Tuple[int, ...]               # live source pages (ceil(len/pt))
+
+
 class PagedKVCache:
     """Host-side metadata controller for one layer-group's KV pool.
 
@@ -426,6 +439,63 @@ class PagedKVCache:
         under the adopter's mode) every page past the leading run, once
         the engine has enqueued the H2D copies that fill the reserved
         pages.  Idempotent; returns pages published."""
+        with self._lock:
+            return self._commit_locked(self._seqs[sid])
+
+    # ------------------------------------------------------------- session snapshot / restore
+
+    def snapshot_seq(self, sid: int) -> SeqSnapshot:
+        """Capture a sequence's metadata for failure-atomic migration
+        (DESIGN.md §12).  Read-only and O(pages): the caller pairs it with
+        a D2H copy of the live pages' bytes.  Taken between engine steps,
+        so staged-but-unverified speculative extents are never present
+        (verify + commit happen within the step)."""
+        with self._lock:
+            seq = self._seqs[sid]
+            n_live = -(-seq.length // self.geom.page_tokens)
+            return SeqSnapshot(length=seq.length,
+                               committed_pages=min(seq.committed_pages,
+                                                   n_live),
+                               mode=seq.mode,
+                               pages=tuple(seq.pages[:n_live]))
+
+    def restore_seq_staged(self, snap: SeqSnapshot) -> Tuple[int, List[int]]:
+        """STAGE a snapshot restore on this controller: allocate a fresh
+        sid + fresh pages and wire them into the extent map and device
+        mirrors — but publish NOTHING (committed_pages stays 0, no oplog
+        entries).  The caller copies the snapshot's page bytes into the
+        returned pages, then flips via ``restore_seq``.  The msync/relink
+        discipline of ``adopt_prefix_staged``: a crash between stage and
+        flip replays to the PRE-restore committed state — never to a torn
+        session whose bytes were still in flight.  Returns (sid, pages)."""
+        g = self.geom
+        with self._lock:
+            n = -(-snap.length // g.page_tokens)
+            if not self._free_sids:
+                raise KVPoolFullError("no free sequence slots")
+            if n > g.pages_per_seq:
+                raise KVPoolFullError("snapshot longer than a page-table row")
+            if n > len(self._free):
+                self.alloc_failures += 1
+                raise KVPoolFullError(
+                    f"need {n} pages to restore, {len(self._free)} free")
+            sid = self._free_sids.popleft()
+            seq = _Seq(sid, length=snap.length, mode=snap.mode)
+            for i in range(n):
+                p = self._alloc_page()
+                seq.pages.append(p)
+                self._page_table[sid, i] = p
+            self._seqs[sid] = seq
+            self._seq_lens[sid] = snap.length
+            return sid, list(seq.pages)
+
+    def restore_seq(self, sid: int) -> int:
+        """The staged restore's FLIP: publish every full page of the
+        restored sequence in one critical section — commits plus, for a
+        STRICT sequence, one OP_KV_COMMIT entry per page under its own
+        mode.  Idempotent (mirrors ``finish_adopt``).  The partial tail
+        page stays staging, exactly as it was on the source.  Returns
+        pages published."""
         with self._lock:
             return self._commit_locked(self._seqs[sid])
 

@@ -173,13 +173,22 @@ class FaultPolicy:
     def __init__(self, monitor: HeartbeatMonitor, *,
                  assignment: Dict[int, int], spares: Sequence[int] = (),
                  chips_per_worker: int, model_axis: int,
-                 pod_axis: int = 1) -> None:
+                 pod_axis: int = 1, steal_on_death: bool = False) -> None:
         self.monitor = monitor
         self.assignment = dict(assignment)
         self.spares = sorted(spares)
         self.chips_per_worker = chips_per_worker
         self.model_axis = model_axis
         self.pod_axis = pod_axis
+        # steal_on_death: a dead shard owner is first STOLEN from (its
+        # shard moves to a free spare, one plan per poll) and the remesh
+        # fallback fires only when no spare is left.  The serving plane
+        # wants this rung — a spare engine restores the dead engine's
+        # sessions from their snapshots without disturbing the survivors —
+        # while training keeps the default (death => restore + reshard).
+        self.steal_on_death = steal_on_death
+        self._dead_pending: List[int] = []    # dead shard owners not yet
+                                              # mitigated (steal_on_death)
         self._mitigated: set = set()          # stragglers already stolen from
         self.steals = 0                       # mitigation counters (obs)
         self.remeshes = 0
@@ -188,23 +197,37 @@ class FaultPolicy:
              restore_step: Optional[int] = None):
         # confirmed deaths first: they invalidate any pending steal
         dead = self.monitor.dead_workers(now=now)
-        if dead:
-            for w in dead:
-                self.monitor.mark_dead(w)
-                self.spares = [s for s in self.spares if s != w]
-                self._mitigated.discard(w)
-            lost_shards = any(w in self.assignment for w in dead)
-            for w in dead:
+        for w in dead:
+            self.monitor.mark_dead(w)
+            self.spares = [s for s in self.spares if s != w]
+            self._mitigated.discard(w)
+            if w in self.assignment:
+                self._dead_pending.append(w)
+        if self._dead_pending:
+            if self.steal_on_death:
+                w = self._dead_pending[0]
+                steal = plan_steal(self.assignment, w, self.spares)
+                if steal is not None:
+                    self._dead_pending.pop(0)
+                    self.assignment = dict(steal.data_shard_of)
+                    self.spares = [s for s in self.spares
+                                   if s != steal.spare]
+                    self.steals += 1
+                    return steal
+            # no steal rung (or no spare free): drop every pending dead
+            # shard onto the survivors in one remesh
+            for w in self._dead_pending:
                 self.assignment.pop(w, None)
-            if lost_shards:
-                plan = plan_remesh(sorted(self.assignment),
-                                   chips_per_worker=self.chips_per_worker,
-                                   model_axis=self.model_axis,
-                                   pod_axis=self.pod_axis,
-                                   restore_step=restore_step)
-                self.assignment = dict(plan.data_shard_of)
-                self.remeshes += 1
-                return plan
+            self._dead_pending.clear()
+            plan = plan_remesh(sorted(self.assignment),
+                               chips_per_worker=self.chips_per_worker,
+                               model_axis=self.model_axis,
+                               pod_axis=self.pod_axis,
+                               restore_step=restore_step)
+            self.assignment = dict(plan.data_shard_of)
+            self.remeshes += 1
+            return plan
+        if dead:
             return None                       # only shard-less workers died
         stragglers = self.monitor.stragglers()
         # a stolen-from straggler that recovered (no longer flagged) is idle

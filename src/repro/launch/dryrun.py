@@ -419,6 +419,110 @@ def smoke_serve_sessions(arch: str, out_dir: Path, *,
     return record
 
 
+def smoke_serve_cluster(arch: str, out_dir: Path, *,
+                        trace: bool = True) -> dict:
+    """Kill-one-engine cluster smoke (CI gate, DESIGN.md §12): 2 shard
+    engines + 1 spare behind one ServeClient, a shared-prefix open-loop
+    workload, and a fault schedule that kills the busiest shard owner
+    mid-run.  Gates:
+
+      * zero lost / duplicated requests (every submitted request finishes
+        exactly once, counted by object identity across all engines);
+      * >= 1 session resumed from its failure-atomic snapshot (no prompt
+        replay) — and the FULL output set is token-identical to an
+        unkilled reference run of the same workload;
+      * the cluster trace (``out_dir/cluster_trace.json``) validates and
+        carries the route/snapshot/migrate span taxonomy."""
+    import numpy as np
+
+    from ..models.spec import init_params
+    from ..obs import Obs, validate_chrome_trace
+    from ..serve import ArrivalSpec, OpenLoopDriver, ServeClient
+
+    cfg = get_config(arch, smoke=True)
+    api = build_model(cfg)
+    params = init_params(api.init_specs(), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    fams = [list(rng.integers(1, cfg.vocab, 16)) for _ in range(4)]
+    prompts = [fams[i % 4] + list(rng.integers(1, cfg.vocab, 4))
+               for i in range(8)]
+    sched = [0.004 * i for i in range(len(prompts))]
+
+    def run_once(kill: bool):
+        obs = Obs(trace=trace, window_s=0.25) if (trace and kill) else None
+        client = ServeClient(api, params, n_engines=2, n_spares=1,
+                             max_batch=2, max_seq=64, page_tokens=8,
+                             heartbeat_timeout=3.0, obs=obs)
+        cluster = client.engine
+        sess = client.open_session()
+        # warm: one generate compiles the shared step's prefill + decode
+        # programs for the whole fleet, so compile time cannot shift
+        # which sessions are in flight at the kill
+        list(sess.generate([1, 2, 3], 2))
+        pre_kill = {}
+
+        def kill_busiest():
+            victim = max(
+                (e for e in range(2) if e not in cluster._killed),
+                key=lambda e: (len(cluster.engines[e].active),
+                               len(cluster.engines[e].waiting)))
+            pre_kill.update(
+                {req.rid: len(req.output)
+                 for req in cluster.engines[victim].active.values()})
+            cluster.kill(victim)
+
+        faults = [(0.03, kill_busiest)] if kill else []
+        workload = [ArrivalSpec(t, p, 24) for t, p in zip(sched, prompts)]
+        result = OpenLoopDriver(client, session=sess).run(
+            workload, faults=faults)
+        outputs = [r.output for r in sess.requests[1:]]  # skip the warm req
+        return client, cluster, sess, result, outputs, pre_kill
+
+    _, _, _, _, ref_outputs, _ = run_once(kill=False)
+    client, cluster, sess, result, outputs, pre_kill = run_once(kill=True)
+
+    submitted = sess.requests[1:]
+    finished = cluster.finished
+    lost = sum(1 for r in submitted if r not in finished)
+    dup = sum(1 for r in submitted
+              if sum(1 for f in finished if f is r) > 1)
+    ok = (all(r.t_done is not None for r in result.records)
+          and lost == 0 and dup == 0
+          and cluster.sessions_migrated >= 1
+          and outputs == ref_outputs)
+    record = {"cell": "serve_cluster", "arch": arch,
+              "status": "ok" if ok else "failed",
+              "requests": len(result.records),
+              "percentiles": result.percentiles(),
+              "lost": lost, "duplicated": dup,
+              "identical_outputs": outputs == ref_outputs,
+              "sessions_migrated": cluster.sessions_migrated,
+              "sessions_requeued": cluster.sessions_requeued,
+              "pre_kill_output_lens": pre_kill,
+              "cluster": cluster.stats()}
+    out_dir.mkdir(parents=True, exist_ok=True)
+    if client.obs is not None:
+        trace_path = out_dir / "cluster_trace.json"
+        client.obs.dump_trace(str(trace_path))
+        doc = json.loads(trace_path.read_text())
+        problems = validate_chrome_trace(doc)
+        names = {ev["name"] for ev in doc["traceEvents"]}
+        missing = {"route", "snapshot", "migrate"} - names
+        if problems or missing:
+            record["status"] = "failed"
+            record["trace_problems"] = problems[:10]
+            record["trace_missing_spans"] = sorted(missing)
+        record["trace"] = str(trace_path)
+        record["trace_events"] = len(doc["traceEvents"])
+    (out_dir / "serve_cluster.json").write_text(
+        json.dumps(record, indent=2, default=str))
+    print(f"[dryrun] serve_cluster: {record['status']} "
+          f"({record['requests']} reqs, migrated="
+          f"{record['sessions_migrated']}, lost={lost}, dup={dup}, "
+          f"identical={record['identical_outputs']})")
+    return record
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS)
@@ -453,8 +557,20 @@ def main() -> None:
                     help="with --serve-sessions: attach a host cold tier "
                          "of this many KV pages and smoke one "
                          "demote -> staged-promote round trip")
+    ap.add_argument("--serve-cluster", action="store_true",
+                    help="kill-one-engine cluster smoke: 2 engines + 1 "
+                         "spare, open-loop workload, fault-atomic session "
+                         "migration gated on zero lost/dup requests and "
+                         "token-identical outputs (DESIGN.md §12)")
     ap.add_argument("--out", default="runs/dryrun")
     args = ap.parse_args()
+
+    if args.serve_cluster:
+        record = smoke_serve_cluster(args.arch or "qwen2-1.5b",
+                                     Path(args.out), trace=args.trace)
+        if record["status"] != "ok":
+            raise SystemExit(1)
+        return
 
     if args.serve_sessions:
         record = smoke_serve_sessions(args.arch or "qwen2-1.5b",

@@ -42,6 +42,26 @@ def make_prompts(rng, vocab: int, n: int, shared_frac: float) -> list:
     return out
 
 
+def _print_open_loop(result, args) -> None:
+    if result is None:
+        return
+    pct = result.percentiles()
+    ttft, lat = pct["ttft"], pct["latency"]
+    if ttft:
+        tail = (f" latency p99={lat['p99']*1e3:.0f}ms" if lat else
+                " (no request completed: latency n/a)")
+        print(f"[serve] open-loop @{args.rate}rps: "
+              f"TTFT p50={ttft['p50']*1e3:.0f}ms "
+              f"p99={ttft['p99']*1e3:.0f}ms{tail}")
+
+
+def _print_stragglers(engine) -> None:
+    stalled = [r for r in list(engine.waiting) + list(engine.active.values())
+               if r.stalled]
+    if stalled:
+        print(f"[serve] WARNING: {len(stalled)} requests stalled (timeout)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2-1.5b")
@@ -76,6 +96,17 @@ def main() -> None:
     ap.add_argument("--rate", type=float, default=0.0,
                     help="open-loop Poisson arrival rate in req/s "
                          "(0 = submit everything up front)")
+    ap.add_argument("--engines", type=int, default=1,
+                    help="shard engines behind the client (> 1 = cluster "
+                         "mode with prefix-affinity routing, DESIGN.md "
+                         "§12)")
+    ap.add_argument("--spares", type=int, default=0,
+                    help="idle spare engines the fault ladder can steal "
+                         "dead/straggling engines' sessions onto")
+    ap.add_argument("--kill-at", type=float, default=0.0,
+                    help="with --rate and cluster mode: kill the busiest "
+                         "shard engine at this many seconds into the "
+                         "open-loop run (0 = no fault)")
     ap.add_argument("--trace", default="",
                     help="obs-instrument the run and write a Chrome "
                          "trace-event JSON here (view in Perfetto)")
@@ -89,10 +120,17 @@ def main() -> None:
     api = build_model(cfg)
     params = init_params(api.init_specs(), jax.random.PRNGKey(args.seed))
     modes = [Mode[m.strip().upper()] for m in args.modes.split(",")]
-    oplog = None
+    cluster_mode = args.engines > 1 or args.spares > 0
+    oplog = make_oplog = None
     if any(m.logs_ops for m in modes):
-        oplog = OpLog(PMDevice(size=16 * 1024 * 1024), base_block=1,
-                      num_blocks=64)
+        # cluster mode: one log per engine VOLUME (each engine is its own
+        # durability domain, DESIGN.md §12), via the factory
+        def make_oplog():
+            return OpLog(PMDevice(size=16 * 1024 * 1024), base_block=1,
+                         num_blocks=64)
+        if not cluster_mode:
+            oplog = make_oplog()
+            make_oplog = None
     obs = Obs(trace=bool(args.trace)) if (args.trace or args.stats) else None
     client = ServeClient(api, params, max_batch=args.max_batch,
                          max_seq=args.max_seq, page_tokens=args.page_tokens,
@@ -100,6 +138,8 @@ def main() -> None:
                          oplog=oplog, prefix_cache=not args.no_prefix_cache,
                          host_cache_pages=args.host_cache_pages,
                          pool_pages=args.pool_pages or None,
+                         n_engines=args.engines, n_spares=args.spares,
+                         make_oplog=make_oplog,
                          obs=obs)
     spec = SpecConfig(k=args.spec_k) if args.spec_k > 0 else None
     sessions = [client.open_session(mode=m, temperature=args.temperature,
@@ -109,6 +149,20 @@ def main() -> None:
     prompts = make_prompts(rng, cfg.vocab, args.requests, args.shared_prefix)
 
     t0 = time.monotonic()
+    faults = []
+    if cluster_mode and args.kill_at > 0 and args.rate > 0:
+        cluster = client.engine
+
+        def kill_busiest():
+            victim = max(
+                (e for e in range(args.engines)
+                 if e not in cluster._killed),
+                key=lambda e: (len(cluster.engines[e].active),
+                               len(cluster.engines[e].waiting)))
+            print(f"[serve] FAULT: killing engine {victim}")
+            cluster.kill(victim)
+
+        faults = [(args.kill_at, kill_busiest)]
     if args.rate > 0:
         sched = poisson_schedule(len(prompts), args.rate, seed=args.seed)
         # ONE open-loop driver; requests round-robin across the mode
@@ -116,8 +170,9 @@ def main() -> None:
         workload = [ArrivalSpec(t, p, args.max_new_tokens,
                                 session=sessions[j % len(sessions)])
                     for j, (t, p) in enumerate(zip(sched, prompts))]
-        result = OpenLoopDriver(client, session=sessions[0]).run(workload)
-        done = client.engine.finished
+        result = OpenLoopDriver(client, session=sessions[0]).run(
+            workload, faults=faults)
+        done = list(client.engine.finished)
     else:
         for i, prompt in enumerate(prompts):
             sessions[i % len(sessions)].submit(
@@ -128,6 +183,21 @@ def main() -> None:
 
     engine = client.engine
     total_tokens = sum(len(r.output) for r in done)
+    if cluster_mode:
+        st = client.stats()["cluster"]
+        print(f"[serve] {len(done)} requests, {total_tokens} tokens in "
+              f"{dt:.2f}s ({st['ticks']} cluster ticks, "
+              f"{args.engines} engines + {args.spares} spares, "
+              f"sessions={','.join(m.name for m in modes)})")
+        rt = st["router"]
+        print(f"[serve] router: {rt['routed_home']} home / "
+              f"{rt['spills']} spilled; migrations={st['migrations']} "
+              f"(migrated={st['sessions_migrated']} "
+              f"requeued={st['sessions_requeued']}), "
+              f"fault={st['fault']}")
+        _print_open_loop(result, args)
+        _print_stragglers(engine)
+        return
     print(f"[serve] {len(done)} requests, {total_tokens} tokens in {dt:.2f}s "
           f"({engine.steps} engine steps, chunk={engine.chunk}, "
           f"sessions={','.join(m.name for m in modes)})")

@@ -25,13 +25,17 @@ batching).  For open-loop traffic, submit via ``Session.submit`` and pump
 from __future__ import annotations
 
 import itertools
-from typing import Dict, Iterator, List, Optional
+from typing import Callable, Dict, Iterator, List, Optional, Union
 
 from ..core.modes import Mode
 from ..core.oplog import OpLog
 from ..models.registry import ModelAPI
 from ..obs import Obs
+from .cluster import EngineCluster
 from .engine import Request, SamplingParams, ServingEngine, SpecConfig
+from .tokenizer import ByteTokenizer
+
+Prompt = Union[str, List[int]]
 
 
 class Session:
@@ -54,15 +58,19 @@ class Session:
 
     # ------------------------------------------------------------------ ops
 
-    def submit(self, prompt: List[int], max_new_tokens: int = 16, *,
+    def submit(self, prompt: Prompt, max_new_tokens: int = 16, *,
                temperature: Optional[float] = None,
                top_k: Optional[int] = None,
                spec: Optional[SpecConfig] = None) -> Request:
         """Queue a request under this session's mode; the engine must be
         pumped (``client.step`` / ``run_until_done`` or any session's
-        generator) for it to make progress."""
+        generator) for it to make progress.  A ``str`` prompt is encoded
+        through the client's tokenizer; token-id prompts pass through
+        untouched."""
         if self.closed:
             raise RuntimeError("session is closed")
+        if isinstance(prompt, str):
+            prompt = self.client.tokenizer.encode(prompt)
         req = self.client.engine.submit(
             list(prompt), max_new_tokens, mode=self.mode,
             sampling=self._sampling(temperature, top_k),
@@ -70,7 +78,7 @@ class Session:
         self.requests.append(req)
         return req
 
-    def generate(self, prompt: List[int], max_new_tokens: int = 16, *,
+    def generate(self, prompt: Prompt, max_new_tokens: int = 16, *,
                  temperature: Optional[float] = None,
                  top_k: Optional[int] = None,
                  spec: Optional[SpecConfig] = None,
@@ -150,9 +158,11 @@ class Session:
 
 
 class ServeClient:
-    """Front-end over one ``ServingEngine``: session management, prefix
-    cache (ON by default — shared prompt prefixes adopt published page
-    chains and skip their prefill), and the engine pump."""
+    """Front-end over one ``ServingEngine`` — or, with ``n_engines > 1``
+    (or spares), an ``EngineCluster`` of them (DESIGN.md §12): session
+    management, tokenizer front, prefix cache (ON by default — shared
+    prompt prefixes adopt published page chains and skip their prefill),
+    and the engine pump.  Sessions are oblivious to which they sit on."""
 
     def __init__(self, api: ModelAPI, params, *, max_batch: int = 8,
                  max_seq: int = 512, page_tokens: int = 16,
@@ -162,6 +172,10 @@ class ServeClient:
                  prefix_cache: bool = True,
                  host_cache_pages: int = 0,
                  pool_pages: Optional[int] = None,
+                 n_engines: int = 1, n_spares: int = 0,
+                 make_oplog: Optional[Callable[[], OpLog]] = None,
+                 heartbeat_timeout: float = 6.0,
+                 tokenizer: Optional[ByteTokenizer] = None,
                  obs: Optional[Obs] = None) -> None:
         # host_cache_pages > 0 attaches the host-memory cold tier under
         # the device pool (DESIGN.md §8a): evicted prefix chains spill
@@ -169,12 +183,35 @@ class ServeClient:
         # them back with an async copy overlapped ahead of prefill.
         # pool_pages caps the device pool below its geometry (pressure
         # modeling / capacity planning).
-        self.engine = ServingEngine(
-            api, params, max_batch=max_batch, max_seq=max_seq,
-            page_tokens=page_tokens, chunk_tokens=chunk_tokens, seed=seed,
-            mode=default_mode, oplog=oplog, prefix_cache=prefix_cache,
-            host_cache_pages=host_cache_pages, pool_pages=pool_pages,
-            obs=obs)
+        self._default_mode = default_mode
+        self.tokenizer = tokenizer if tokenizer is not None \
+            else ByteTokenizer()
+        if n_engines > 1 or n_spares > 0:
+            # cluster mode: each engine is its own durability domain, so
+            # a single shared oplog would interleave volumes — STRICT
+            # sessions need one log per engine via the factory
+            if oplog is not None:
+                raise ValueError(
+                    "cluster mode: pass make_oplog (one log per engine "
+                    "volume), not a single shared oplog")
+            self.engine = EngineCluster(
+                api, params, n_engines=n_engines, n_spares=n_spares,
+                heartbeat_timeout=heartbeat_timeout, max_batch=max_batch,
+                max_seq=max_seq, page_tokens=page_tokens,
+                chunk_tokens=chunk_tokens, seed=seed, mode=default_mode,
+                make_oplog=make_oplog, prefix_cache=prefix_cache,
+                host_cache_pages=host_cache_pages, pool_pages=pool_pages,
+                obs=obs)
+        else:
+            self.engine = ServingEngine(
+                api, params, max_batch=max_batch, max_seq=max_seq,
+                page_tokens=page_tokens, chunk_tokens=chunk_tokens,
+                seed=seed, mode=default_mode,
+                oplog=oplog if oplog is not None
+                else (make_oplog() if make_oplog is not None else None),
+                prefix_cache=prefix_cache,
+                host_cache_pages=host_cache_pages, pool_pages=pool_pages,
+                obs=obs)
         self.obs = obs
         self._sids = itertools.count()
         self.sessions: Dict[int, Session] = {}
@@ -189,7 +226,7 @@ class ServeClient:
         requests (greedy only; ignored for recurrent-state models)."""
         sid = next(self._sids)
         sess = Session(self, sid,
-                       self.engine.controller.mode if mode is None else mode,
+                       self._default_mode if mode is None else mode,
                        SamplingParams(temperature=temperature, top_k=top_k),
                        spec=spec)
         self.sessions[sid] = sess
@@ -206,8 +243,16 @@ class ServeClient:
     # ------------------------------------------------------------------ stats
 
     def stats(self) -> Dict[str, object]:
+        if isinstance(self.engine, EngineCluster):
+            out: Dict[str, object] = {
+                "cluster": self.engine.stats(),
+                "sessions": len(self.sessions),
+            }
+            if self.obs is not None:
+                out["obs"] = self.obs.stats()
+            return out
         ctrl = self.engine.controller
-        out: Dict[str, object] = {
+        out = {
             "steps": self.engine.steps,
             "pages_relinked": ctrl.pages_relinked,
             "pages_copied": ctrl.pages_copied,

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -123,10 +123,18 @@ class OpenLoopDriver:
         self.time_scale = time_scale
 
     def run(self, workload: Sequence[ArrivalSpec],
-            max_steps: int = 1000000) -> ArrivalResult:
+            max_steps: int = 1000000,
+            faults: Sequence[Tuple[float, Callable[[], None]]] = (),
+            ) -> ArrivalResult:
+        """``faults`` is a schedule of ``(t, action)`` pairs on the same
+        (time_scale-adjusted) clock as the arrivals: each ``action`` fires
+        once, the first time the driver's clock passes ``t`` — e.g.
+        ``(0.05, lambda: cluster.kill(0))`` for a kill-one-engine run."""
         specs = sorted(workload, key=lambda s: s.t_arrival)
         records = [RequestRecord(s, t_arrival=s.t_arrival * self.time_scale)
                    for s in specs]
+        fq = sorted(faults, key=lambda f: f[0])
+        fi = 0
         live: Dict[int, tuple] = {}              # rid -> (request, record)
         eng = self.client.engine
         obs = eng.obs
@@ -140,6 +148,9 @@ class OpenLoopDriver:
         t0 = time.perf_counter()
         while i < len(specs) or eng.active or eng.waiting:
             now = time.perf_counter() - t0
+            while fi < len(fq) and fq[fi][0] * self.time_scale <= now:
+                fq[fi][1]()
+                fi += 1
             while i < len(specs) and records[i].t_arrival <= now:
                 rec = records[i]
                 sess = specs[i].session or self.session

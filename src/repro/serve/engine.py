@@ -112,6 +112,8 @@ class Request:
     promoting: bool = False              # host-tier H2D copy in flight: the
                                          # slot is held out of the step until
                                          # the page-table flip lands
+    engine_id: Optional[int] = None      # owning engine in a cluster (the
+                                         # router tags it; migration retags)
     done: bool = False
     truncated: bool = False              # finished early (pool backpressure)
     stalled: bool = False                # run_until_done hit max_steps first
@@ -139,7 +141,8 @@ class ServingEngine:
                  spec: Optional[SpecConfig] = None,
                  host_cache_pages: int = 0,
                  pool_pages: Optional[int] = None,
-                 obs: Optional[Obs] = None) -> None:
+                 obs: Optional[Obs] = None,
+                 step_fn=None) -> None:
         self.api = api
         self.params = params
         self.max_batch = max_batch
@@ -199,7 +202,11 @@ class ServingEngine:
         # hard per-slot token cap: the fixed-shape step addresses positions
         # up to lengths + C - 1, which must stay inside the page-table row
         self._cap = min(max_seq - 1, geom.max_tokens_per_seq - self.chunk)
-        self._step_fn = jax.jit(api.serve_step)
+        # step_fn lets a cluster share ONE jitted program across its
+        # engines (identical shapes => identical executable; N engines
+        # must not pay N compiles)
+        self._step_fn = step_fn if step_fn is not None \
+            else jax.jit(api.serve_step)
         self.waiting: List[Request] = []
         self.active: Dict[int, Request] = {}     # slot -> request
         self.finished: List[Request] = []
@@ -678,6 +685,26 @@ class ServingEngine:
         elif req.slot is not None and self.active.get(req.slot) is req:
             self._finish(req.slot, req)
 
+    def detach(self, req: Request) -> None:
+        """Hand a LIVE request off this engine (session migration,
+        DESIGN.md §12): release its slot, sequence, and any staged
+        promotion WITHOUT finishing it — the caller re-installs it on
+        another engine from its snapshot.  ``free_seq`` tombstones
+        (OP_UNLINK) the sequence in THIS engine's log, so this volume's
+        crash replay never resurrects a session that moved away.  Called
+        only on a live source (straggler steal); a dead engine's state is
+        frozen and merely read."""
+        if req in self.waiting:
+            self.waiting.remove(req)
+            return
+        if req.slot is not None and self.active.get(req.slot) is req:
+            self._promotions = [p for p in self._promotions
+                                if p["req"] is not req]
+            self.controller.free_seq(req.seq_id)
+            del self.active[req.slot]
+            req.slot = None
+            req.seq_id = None
+
     def _finish(self, slot: int, req: Request) -> None:
         req.done = True
         req.stalled = False      # it completed after all: not a timeout
@@ -987,6 +1014,30 @@ class ServingEngine:
             idx = (slice(None),) * batch_dim + (slot,)
             return leaf.at[idx].set(0)
         self._walk_state(zero)
+
+    def _gather_slot_state(self, slot: int) -> List[np.ndarray]:
+        """D2H snapshot of one slot's recurrent/SSM state across every
+        conv/h/ssd leaf, in the deterministic ``_walk_state`` order (the
+        migration payload for recurrent archs)."""
+        out: List[np.ndarray] = []
+
+        def grab(leaf, batch_dim):
+            idx = (slice(None),) * batch_dim + (slot,)
+            out.append(np.asarray(leaf[idx]))
+            return leaf
+
+        self._walk_state(grab)
+        return out
+
+    def _scatter_slot_state(self, slot: int, views: List[np.ndarray]) -> None:
+        """H2D restore of a gathered slot state (same walk order)."""
+        it = iter(views)
+
+        def put(leaf, batch_dim):
+            idx = (slice(None),) * batch_dim + (slot,)
+            return leaf.at[idx].set(jnp.asarray(next(it)))
+
+        self._walk_state(put)
 
     def _copy_slot_state(self, src: int, dst: int) -> None:
         def copy(leaf, batch_dim):

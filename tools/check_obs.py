@@ -37,6 +37,12 @@ REQUIRED_SPANS = {"step", "admit", "schedule", "serve_step", "sample",
                   # per-slot 200+ lanes (overlapping serve_step by design)
                   "demote", "promote"}
 
+# cluster-plane taxonomy (DESIGN.md §12): route instants at submit, and
+# per-session snapshot spans nested inside each migrate span.  The
+# cluster trace carries CONTROL-plane events only (the engines' data
+# planes are separately instrumented), so no request lanes are required.
+CLUSTER_REQUIRED_SPANS = {"route", "snapshot", "migrate", "kill"}
+
 
 def check_trace(path: Path) -> None:
     doc = json.loads(path.read_text())
@@ -53,6 +59,21 @@ def check_trace(path: Path) -> None:
         raise SystemExit(f"[check_obs] trace {path} has no request lanes")
     print(f"[check_obs] trace ok: {len(doc['traceEvents'])} events, "
           f"spans nest, request lanes present")
+
+
+def check_cluster_trace(path: Path) -> None:
+    doc = json.loads(path.read_text())
+    problems = validate_chrome_trace(doc)
+    if problems:
+        raise SystemExit(f"[check_obs] cluster trace {path} invalid: "
+                         + "; ".join(problems[:5]))
+    names = {ev["name"] for ev in doc["traceEvents"]}
+    missing = CLUSTER_REQUIRED_SPANS - names
+    if missing:
+        raise SystemExit(f"[check_obs] cluster trace {path} missing spans: "
+                         f"{sorted(missing)}")
+    print(f"[check_obs] cluster trace ok: {len(doc['traceEvents'])} events, "
+          f"route/snapshot/migrate present")
 
 
 def check_overhead(path: Path, bound: float) -> None:
@@ -83,8 +104,11 @@ def main() -> None:
     trace = Path(sys.argv[1] if len(sys.argv) > 1
                  else "runs/ci-dryrun/serve_trace.json")
     bench = Path(sys.argv[2] if len(sys.argv) > 2 else "BENCH_serve.json")
+    cluster = Path(sys.argv[3] if len(sys.argv) > 3
+                   else "runs/ci-dryrun/cluster_trace.json")
     bound = float(os.environ.get("OBS_OVERHEAD_BOUND", "0.02"))
     check_trace(trace)
+    check_cluster_trace(cluster)
     check_overhead(bench, bound)
     print("[check_obs] ok")
 

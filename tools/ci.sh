@@ -25,6 +25,9 @@ python -m repro.launch.dryrun --arch qwen2-1.5b --shape decode_32k \
 echo "== dryrun smoke: session API (modes + prefix cache + host tier) =="
 python -m repro.launch.dryrun --serve-sessions --trace --smoke \
     --host-cache-pages 16 --out runs/ci-dryrun
+echo "== dryrun smoke: kill-one-engine cluster (2 engines + 1 spare) =="
+python -m repro.launch.dryrun --serve-cluster --trace --smoke \
+    --out runs/ci-dryrun
 
 echo "== dist microbench (fast): BENCH_dist.json trajectory =="
 python -m benchmarks.dist_micro --fast --out BENCH_dist.json
@@ -33,7 +36,8 @@ echo "== serve microbench (fast): BENCH_serve.json trajectory =="
 python -m benchmarks.serve_micro --fast --out BENCH_serve.json
 
 echo "== obs gate: trace validity + instrumentation overhead bound =="
-python tools/check_obs.py runs/ci-dryrun/serve_trace.json BENCH_serve.json
+python tools/check_obs.py runs/ci-dryrun/serve_trace.json BENCH_serve.json \
+    runs/ci-dryrun/cluster_trace.json
 
 echo "== speculation gate: decode_speedup >= 1.5x with identical outputs =="
 python - <<'PY'
@@ -65,6 +69,22 @@ print(f"[ci] host tier: hit rate {off:.0%} -> {on:.0%} "
       f"{sr['tiered']['pages_demoted']} demoted / "
       f"{sr['tiered']['pages_promoted']} promoted, identical outputs"
       + (f"; TTFT p50 {ttft:.2f}x uncontended" if ttft else ""))
+PY
+
+echo "== cluster gate: kill-one-engine migration exact, nothing lost =="
+python - <<'PY'
+import json
+fs = json.load(open("BENCH_arrival.json"))["fault_sweep"]
+ko = fs["kill_one_engine"]
+assert fs["identical_outputs"], "migrated sessions changed greedy outputs"
+assert ko["sessions_migrated"] >= 1, "no session resumed from snapshot"
+assert ko["lost"] == 0, f"{ko['lost']} requests lost across the kill"
+assert ko["duplicated"] == 0, f"{ko['duplicated']} requests duplicated"
+p99c = fs["no_fault"]["ttft_s"].get("p99")
+p99f = ko["ttft_s"].get("p99")
+print(f"[ci] cluster: {ko['sessions_migrated']} migrated / "
+      f"{ko['sessions_requeued']} requeued, 0 lost/dup, identical outputs; "
+      f"TTFT p99 {p99c*1e3:.0f}ms -> {p99f*1e3:.0f}ms under the kill")
 PY
 
 if [[ "${1:-}" == "--bench" ]]; then
